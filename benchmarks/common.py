@@ -1,0 +1,23 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Callable, Dict, List
+
+
+def tight_bound(specs, frac: float = 0.10) -> float:
+    return sum(s.lut.idle_w + frac * (s.lut.p_min - s.lut.idle_w)
+               for s in specs)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+@contextmanager
+def timed(out: Dict[str, float], key: str = "s"):
+    t0 = time.perf_counter()
+    yield
+    out[key] = time.perf_counter() - t0

@@ -1,0 +1,35 @@
+"""Paper Tables I & II: max-depths and depth ranges of the running
+example (Listing 2 / Fig. 4), plus the total-execution-time check (19)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import listing2_graph
+
+from .common import csv_line
+
+
+def main(quick: bool = False) -> list:
+    g = listing2_graph()
+    t0 = time.perf_counter()
+    depths = g.max_depths()
+    ranges = g.depth_ranges()
+    us = (time.perf_counter() - t0) * 1e6
+
+    print("Table I (max-depths):")
+    for job_idx in range(1, 6):
+        row = " ".join(f"{depths[(n, job_idx)]:>3d}" for n in (1, 2, 3))
+        print(f"  Job {job_idx}:  {row}")
+    print("Table II (depth ranges):")
+    for job_idx in range(1, 6):
+        row = "  ".join(f"[{ranges[(n, job_idx)][0]},"
+                        f"{ranges[(n, job_idx)][1]}]" for n in (1, 2, 3))
+        print(f"  Job {job_idx}:  {row}")
+    makespan = g.makespan(lambda j: j.work)
+    print(f"Total execution time (paper: 19): {makespan}")
+    return [csv_line("depth_tables", us, f"makespan={makespan}")]
+
+
+if __name__ == "__main__":
+    main()

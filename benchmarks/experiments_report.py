@@ -1,0 +1,66 @@
+"""Generates the §Dry-run and §Roofline markdown tables for
+EXPERIMENTS.md from the results/dryrun artifacts."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import cells
+from repro.core.roofline import build_table, roofline_row
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "results" / "dryrun"
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | GiB/dev | HLO flops (raw) | "
+             "collective MiB/dev (loop-corr.) | compile s |",
+             "|---|---|---|---:|---:|---:|---:|"]
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        coll = sum(r.get("collectives_per_device_loop_corrected",
+                         {}).values()) / 2**20
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['peak_bytes_per_device'] / 2**30:.2f} "
+            f"| {r['cost'].get('flops', 0):.2e} "
+            f"| {coll:.0f} | {r['compile_seconds']:.0f} |")
+    return "\n".join(lines)
+
+
+def skip_table() -> str:
+    lines = ["| arch | shape | status |", "|---|---|---|"]
+    for arch, shape, status in cells():
+        if status != "run":
+            lines.append(f"| {arch} | {shape} | {status} |")
+    return "\n".join(lines)
+
+
+def roofline_md(mesh: str) -> str:
+    rows = build_table(str(DRYRUN), mesh=mesh)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| roofline frac | useful ratio | GiB/dev |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.4f} "
+            f"| {r.memory_s:.4f} | {r.collective_s:.4f} | {r.dominant} "
+            f"| {r.roofline_fraction:.2f} | {r.useful_ratio:.2f} "
+            f"| {r.peak_gib_per_dev:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run artifacts\n")
+    print(dryrun_table())
+    print("\n## Documented skips\n")
+    print(skip_table())
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n## Roofline ({mesh})\n")
+        print(roofline_md(mesh))
+
+
+if __name__ == "__main__":
+    main()

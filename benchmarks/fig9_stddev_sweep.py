@@ -1,0 +1,47 @@
+"""Paper Fig. 9: speedup vs standard deviation of job execution times
+(same Listing-2 structure, times ~ N(10, sigma), sigma = 0..6), at the
+tightest cluster bound.  Paper: speedup increases with variability and
+becomes unstable at high sigma."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (compare_policies, homogeneous_cluster,
+                        listing2_random)
+
+from .common import csv_line, tight_bound
+
+
+def main(quick: bool = False) -> list:
+    specs = homogeneous_cluster(3)
+    P = tight_bound(specs)
+    sds = [0, 2, 4, 6] if quick else [0, 1, 2, 3, 4, 5, 6]
+    seeds = [3] if quick else [3, 11, 42]
+
+    print("\nfig9: speedup vs stddev of job times "
+          "(paper: increases with variability, unstable at high sigma)")
+    print(f"{'sd':>4s} {'ILP':>6s} {'heur':>6s}")
+    t0 = time.perf_counter()
+    results = []
+    for sd in sds:
+        ilp_s, heur_s = [], []
+        for seed in seeds:
+            g = listing2_random(float(sd), seed=seed)
+            res = compare_policies(g, specs, P)
+            eq = res["equal-share"]
+            ilp_s.append(res["ilp"].speedup_vs(eq))
+            heur_s.append(res["heuristic"].speedup_vs(eq))
+        mean_ilp = sum(ilp_s) / len(ilp_s)
+        mean_heur = sum(heur_s) / len(heur_s)
+        results.append((sd, mean_ilp, mean_heur))
+        print(f"{sd:4d} {mean_ilp:6.2f} {mean_heur:6.2f}")
+    us = (time.perf_counter() - t0) * 1e6 / len(sds)
+    lo, hi = results[0][2], results[-1][2]
+    return [csv_line("fig9_stddev", us,
+                     f"heur_sd0={lo:.2f}x;heur_sd6={hi:.2f}x;"
+                     f"trend={'up' if hi > lo else 'flat'}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Figs. 11-13: the NPB benchmark analogues (IS / EP / CG) across
+problem classes A/B/C on a heterogeneous cluster.
+
+Paper's findings to match:
+  * EP (CPU-bound): largest heuristic gains (2.25x at class C; ILP 2.78x);
+  * IS (memory-bound): moderate gains improving with class size;
+  * CG (comm-bound): ~no gain but ~no harm (worst observed 0.98x);
+  * heuristic avg power slightly above equal-share everywhere.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (cg_like, compare_policies, ep_like,
+                        heterogeneous_cluster, is_like, simulate,
+                        solve_paper_ilp)
+
+from .common import csv_line, tight_bound
+
+GENS = {"is": is_like, "ep": ep_like, "cg": cg_like}
+
+
+def main(quick: bool = False) -> list:
+    n_nodes = 4
+    specs = heterogeneous_cluster(n_nodes)
+    P = tight_bound(specs, frac=0.3)
+    classes = ["A", "B"] if quick else ["A", "B", "C"]
+    # report->distribute RTT: meaningful vs CG's sub-second jobs (the
+    # paper's UDP controller; why CG barely benefits, §VII-C)
+    latency = 0.5
+
+    out = []
+    for name, gen in GENS.items():
+        print(f"\n{name.upper()} benchmark (cluster bound {P:.2f} W):")
+        print(f"{'class':>6s} {'jobs':>6s} {'ILP':>6s} {'heur':>6s} "
+              f"{'heurP[W]':>9s} {'eqP[W]':>7s}")
+        t0 = time.perf_counter()
+        last = {}
+        for klass in classes:
+            g = gen(n_nodes, klass)
+            # ILP on every class like the paper, but cap solver time on
+            # the big CG instances
+            run_ilp = not (name == "cg" and klass == "C" and quick)
+            eq = simulate(g, specs, P, "equal-share", latency_s=latency)
+            heur = simulate(g, specs, P, "heuristic", latency_s=latency)
+            row = {"heur": eq.makespan / heur.makespan,
+                   "heurP": heur.avg_power_w, "eqP": eq.avg_power_w}
+            if run_ilp:
+                try:
+                    a = solve_paper_ilp(g, specs, P, time_limit=90.0)
+                    ilp = simulate(g, specs, P, "ilp", assignment=a,
+                                   latency_s=latency)
+                    row["ilp"] = eq.makespan / ilp.makespan
+                except RuntimeError:
+                    row["ilp"] = float("nan")
+            else:
+                row["ilp"] = float("nan")
+            print(f"{klass:>6s} {len(g):6d} {row['ilp']:6.2f} "
+                  f"{row['heur']:6.2f} {row['heurP']:9.2f} "
+                  f"{row['eqP']:7.2f}")
+            last = row
+        us = (time.perf_counter() - t0) * 1e6 / len(classes)
+        out.append(csv_line(f"npb_{name}", us,
+                            f"heur_speedup_last={last['heur']:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""§Roofline deliverable: the three-term roofline table per
+(architecture x shape x mesh) from the dry-run artifacts, with the
+dominant bottleneck and one-line what-would-help notes."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from repro.core.roofline import build_table, format_table, load_records
+
+from .common import csv_line
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+_HINTS = {
+    "compute": "compute-bound: raise MFU (fusion, larger tiles, fewer "
+               "recomputes)",
+    "memory": "HBM-bound: cut optimizer/weight traffic (state dtype, "
+              "remat policy)",
+    "collective": "ICI-bound: reshard to cut gathers, overlap collectives "
+                  "with compute",
+}
+
+
+def main(quick: bool = False) -> list:
+    if not DRYRUN_DIR.exists() or not any(DRYRUN_DIR.glob("*.json")):
+        print("no dry-run artifacts; run `python -m repro.launch.dryrun "
+              "--all` first")
+        return [csv_line("roofline_report", 0.0, "no_artifacts")]
+    t0 = time.perf_counter()
+    for mesh in ("pod16x16",) if quick else ("pod16x16", "pod2x16x16"):
+        rows = build_table(str(DRYRUN_DIR), mesh=mesh)
+        if not rows:
+            continue
+        print(f"\n=== roofline ({mesh}, seconds/step) ===")
+        print(format_table(rows))
+        worst = min(rows, key=lambda r: r.roofline_fraction)
+        print(f"\nworst roofline fraction: {worst.arch} x {worst.shape} "
+              f"({worst.roofline_fraction:.2f}, {worst.dominant}-bound) — "
+              f"{_HINTS[worst.dominant]}")
+    us = (time.perf_counter() - t0) * 1e6
+    rows = build_table(str(DRYRUN_DIR))
+    frac = sum(r.roofline_fraction for r in rows) / max(len(rows), 1)
+    return [csv_line("roofline_report", us, f"mean_fraction={frac:.2f}")]
+
+
+if __name__ == "__main__":
+    main()

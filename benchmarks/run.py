@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV at the end.  ``--full`` runs the
+heavier class-C / 9-point variants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full problem classes / sweep resolutions")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from . import (depth_tables, fig8_power_sweep, fig9_stddev_sweep,
+                   lm_workloads, npb_analogues, roofline_report)
+
+    benches = {
+        "depth_tables": depth_tables.main,        # Tables I & II
+        "fig8": fig8_power_sweep.main,            # Fig. 8 (+ uniform §VI)
+        "fig9": fig9_stddev_sweep.main,           # Fig. 9
+        "npb": npb_analogues.main,                # Figs. 11-13
+        "lm_workloads": lm_workloads.main,        # pipeline/MoE graphs
+        "roofline": roofline_report.main,         # §Roofline table
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    lines = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        try:
+            lines.extend(fn(quick=quick))
+        except Exception as e:  # noqa: BLE001
+            print(f"BENCH FAILURE {name}: {e!r}")
+            lines.append(f"{name},0.0,FAILED")
+
+    print("\n--- CSV (name,us_per_call,derived) ---")
+    for line in lines:
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

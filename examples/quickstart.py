@@ -1,0 +1,42 @@
+"""Quickstart: the paper's technique in ~40 lines.
+
+Builds the paper's running example (Listing 2 / Fig. 4), solves the
+optimal power assignment with the ILP, runs the online heuristic, and
+compares makespans against equal-share — all under a tight cluster power
+bound.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import (compare_policies, homogeneous_cluster,
+                        listing2_graph)
+
+
+def main():
+    # 1. the workload: a job dependency graph (jobs = compute blocks
+    #    between MPI/collective sync points)
+    graph = listing2_graph()
+    print(f"graph: {graph.stats()}")
+    print(f"nominal total execution time: "
+          f"{graph.makespan(lambda j: j.work)} (paper: 19)")
+
+    # 2. the cluster: 3 nodes with DVFS power tables, under a tight bound
+    specs = homogeneous_cluster(3)
+    lut = specs[0].lut
+    bound_w = sum(s.lut.idle_w + 0.1 * (s.lut.p_min - s.lut.idle_w)
+                  for s in specs)
+    print(f"cluster power bound: {bound_w:.2f} W "
+          f"(flat-out would need {3 * lut.p_max:.1f} W)")
+
+    # 3. equal-share vs optimal ILP (§IV) vs online heuristic (§V)
+    results = compare_policies(graph, specs, bound_w)
+    eq = results["equal-share"]
+    print(f"\n{'policy':<14s} {'makespan':>10s} {'speedup':>8s} "
+          f"{'avg W':>7s}")
+    for name, r in results.items():
+        print(f"{name:<14s} {r.makespan:10.2f} "
+              f"{eq.makespan / r.makespan:7.2f}x {r.avg_power_w:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

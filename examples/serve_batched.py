@@ -1,0 +1,40 @@
+"""Batched serving example: prefill + decode with KV cache on a small
+MoE model (the serving-side face of the framework).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving.engine import ServeEngine  # noqa: E402
+
+
+def main():
+    cfg = get_smoke("moonshot-v1-16b-a3b")  # small MoE
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_seq=64, max_batch=8)
+
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(2, cfg.vocab, (8, 12), dtype=np.int32),
+                rng.integers(2, cfg.vocab, (8, 12), dtype=np.int32)]
+
+    for i, prompts in enumerate(requests):
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, max_new=16,
+                              temperature=0.8, seed=i)
+        dt = time.perf_counter() - t0
+        print(f"request batch {i}: {prompts.shape[0]} lanes x "
+              f"{out.steps} new tokens in {dt:.2f}s")
+        print(f"  lane 0 continuation: {out.new_tokens[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

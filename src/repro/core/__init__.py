@@ -1,0 +1,32 @@
+"""The paper's contribution: power redistribution under a cluster bound.
+
+Layers:
+  graph          — job dependency graph, max-depths, depth ranges (§III/§IV-A)
+  power          — DVFS LUTs, tau(J, P), Eq. (3) multicore power gain (§V-A)
+  ilp            — paper ILP + beyond-paper exact-makespan MILP (§IV-B)
+  block_detector — report messages + ski-rental debounce (§V-A, §VII-A2)
+  heuristic      — Algorithm 1 online controller (§V-B)
+  simulator      — discrete-event cluster simulator (§VI)
+  workloads      — Listing-2 example, NPB analogues, pipeline/MoE graphs
+  hlo_extract    — job graphs from compiled JAX/XLA steps (§VII-A1 analogue)
+  roofline       — three-term roofline from dry-run artifacts
+"""
+
+from .block_detector import (DistributeMessage, NodeState, ReportManager,
+                             ReportMessage, blocked_report, running_report)
+from .graph import Job, JobDependencyGraph, JobId
+from .heuristic import PowerDistributionController
+from .ilp import (PowerAssignment, assignment_peak_power,
+                  build_makespan_milp, equal_share_assignment,
+                  solve_paper_ilp)
+from .power import (NodeSpec, PowerLUT, PowerState, arndale_like_lut,
+                    heterogeneous_cluster, homogeneous_cluster, job_time,
+                    max_useful_cluster_bound, min_feasible_cluster_bound,
+                    nominal_bound, odroid_like_lut, progress_rate,
+                    tpu_v5e_lut)
+from .simulator import SimResult, Simulator, compare_policies, simulate
+from .workloads import (LISTING2_TIMES, TraceBuilder, cg_like, ep_like,
+                        is_like, listing2_graph, listing2_random,
+                        listing2_uniform, moe_step_graph, pipeline_graph)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

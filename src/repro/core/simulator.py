@@ -1,0 +1,354 @@
+"""Discrete-event cluster simulator (paper §VI).
+
+Executes a job dependency graph on a modelled cluster under one of three
+power-distribution policies:
+
+  * ``equal-share`` — every node permanently capped at P/n;
+  * ``ilp``         — per-job caps from a :class:`PowerAssignment` (§IV);
+  * ``heuristic``   — the online controller of Algorithm 1 (§V) with
+                      report/distribute message latency and the §VII-A2
+                      ski-rental debounce, faithfully reproducing the
+                      paper's observed transient power surges.
+
+The simulator is event-driven: job completions, report-manager flushes,
+controller receipts, and power-bound arrivals.  A node's progress through
+its current job integrates work at the rate implied by its current
+frequency, so mid-job cap changes take effect immediately (that is the
+whole point of power redistribution).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .block_detector import (NodeState, ReportManager, blocked_report,
+                             running_report)
+from .graph import Job, JobDependencyGraph, JobId
+from .heuristic import PowerDistributionController
+from .ilp import PowerAssignment
+from .power import NodeSpec, OperatingPoint, op_rate, operating_point
+
+
+@dataclass
+class SimResult:
+    policy: str
+    makespan: float
+    energy_j: float
+    avg_power_w: float
+    peak_power_w: float
+    over_budget_time: float       # time spent above the cluster bound
+    messages: int                 # reports that reached the controller
+    distributes: int
+    suppressed_reports: int       # debounce savings
+    power_trace: List[Tuple[float, float]] = field(repr=False,
+                                                   default_factory=list)
+    job_starts: Dict[JobId, float] = field(repr=False, default_factory=dict)
+    job_ends: Dict[JobId, float] = field(repr=False, default_factory=dict)
+
+    def speedup_vs(self, baseline: "SimResult") -> float:
+        return baseline.makespan / self.makespan
+
+
+class _NState:
+    RUNNING, BLOCKED, DONE = "running", "blocked", "done"
+
+
+@dataclass
+class _NodeRT:
+    nid: int
+    spec: NodeSpec
+    jobs: List[Job]
+    ptr: int = 0
+    state: str = _NState.BLOCKED
+    cap_w: float = 0.0
+    op: Optional[OperatingPoint] = None
+    remaining: float = 0.0
+    last_update: float = 0.0
+    version: int = 0
+    rm: Optional[ReportManager] = None
+
+    @property
+    def current(self) -> Optional[Job]:
+        return self.jobs[self.ptr] if self.ptr < len(self.jobs) else None
+
+
+class Simulator:
+    def __init__(self, graph: JobDependencyGraph, specs: Sequence[NodeSpec],
+                 cluster_bound_w: float, policy: str = "equal-share",
+                 assignment: Optional[PowerAssignment] = None,
+                 latency_s: float = 0.05, max_events: int = 5_000_000):
+        graph.topological_order()
+        self.graph = graph
+        self.node_ids = graph.nodes
+        if len(specs) != len(self.node_ids):
+            raise ValueError("one NodeSpec per graph node required")
+        self.specs = {nid: specs[k] for k, nid in enumerate(self.node_ids)}
+        self.bound = cluster_bound_w
+        self.policy = policy
+        self.assignment = assignment
+        if policy == "ilp" and assignment is None:
+            raise ValueError("ilp policy requires an assignment")
+        self.latency = latency_s
+        self.rtt = 2.0 * latency_s
+        self.max_events = max_events
+
+        self.p_o = cluster_bound_w / len(self.node_ids)
+        self.completed: Set[JobId] = set()
+        self.children = graph.children()
+        self.waiters: Dict[JobId, List[int]] = {}
+        self.controller = PowerDistributionController(
+            cluster_bound_w, len(self.node_ids),
+            specs=specs, node_ids=self.node_ids) \
+            if policy == "heuristic" else None
+
+        self.nodes: Dict[int, _NodeRT] = {}
+        for nid in self.node_ids:
+            rt = _NodeRT(nid=nid, spec=self.specs[nid],
+                         jobs=graph.node_jobs(nid))
+            rt.cap_w = self.p_o
+            rt.op = operating_point(rt.spec.lut, rt.cap_w)
+            if policy == "heuristic":
+                rt.rm = ReportManager(node=nid, breakeven_s=self.rtt)
+            self.nodes[nid] = rt
+
+        self._heap: List[Tuple[float, int, Tuple]] = []
+        self._seq = itertools.count()
+        self._now = 0.0
+        self._power_trace: List[Tuple[float, float]] = []
+        self._energy = 0.0
+        self._peak = 0.0
+        self._over_budget_time = 0.0
+        self._last_power_t = 0.0
+        self._last_power = 0.0
+        self.job_starts: Dict[JobId, float] = {}
+        self.job_ends: Dict[JobId, float] = {}
+
+    # ------------------------------------------------------------- plumbing
+    def _push(self, t: float, ev: Tuple) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), ev))
+
+    def _node_power(self, rt: _NodeRT) -> float:
+        if rt.state == _NState.RUNNING:
+            return rt.op.power_w
+        return rt.spec.lut.idle_w
+
+    def _account_power(self, t: float) -> None:
+        """Integrate energy up to t, then snapshot instantaneous power."""
+        dt = t - self._last_power_t
+        if dt > 0:
+            self._energy += self._last_power * dt
+            if self._last_power > self.bound + 1e-9:
+                self._over_budget_time += dt
+        p = sum(self._node_power(rt) for rt in self.nodes.values())
+        self._last_power_t = t
+        self._last_power = p
+        self._peak = max(self._peak, p)
+        if not self._power_trace or self._power_trace[-1][0] != t:
+            self._power_trace.append((t, p))
+        else:
+            self._power_trace[-1] = (t, p)
+
+    # ---------------------------------------------------------- job control
+    def _job_cap(self, rt: _NodeRT, job: Job) -> float:
+        if self.policy == "ilp":
+            return self.assignment.bounds_w[job.job_id]
+        return rt.cap_w
+
+    def _rate(self, rt: _NodeRT, job: Job) -> float:
+        return op_rate(job, rt.op, rt.spec.lut.f_max, rt.spec.speed)
+
+    def _deps_ready(self, job: Job) -> bool:
+        return all(d in self.completed for d in job.deps)
+
+    def _start_job(self, rt: _NodeRT, t: float) -> None:
+        job = rt.current
+        assert job is not None
+        rt.state = _NState.RUNNING
+        if self.policy == "ilp":
+            rt.cap_w = self._job_cap(rt, job)
+            rt.op = operating_point(rt.spec.lut, rt.cap_w)
+        rt.remaining = job.work
+        rt.last_update = t
+        rt.version += 1
+        self.job_starts[job.job_id] = t
+        if job.work <= 0:
+            self._push(t, ("finish", rt.nid, rt.version))
+        else:
+            dur = rt.remaining / self._rate(rt, job)
+            self._push(t + dur, ("finish", rt.nid, rt.version))
+
+    def _update_progress(self, rt: _NodeRT, t: float) -> None:
+        job = rt.current
+        if rt.state != _NState.RUNNING or job is None or job.work <= 0:
+            rt.last_update = t
+            return
+        rate = self._rate(rt, job)
+        rt.remaining = max(0.0, rt.remaining - rate * (t - rt.last_update))
+        rt.last_update = t
+
+    def _reschedule(self, rt: _NodeRT, t: float) -> None:
+        job = rt.current
+        if rt.state != _NState.RUNNING or job is None:
+            return
+        rt.version += 1
+        rate = self._rate(rt, job)
+        dur = rt.remaining / rate if rate > 0 else 0.0
+        self._push(t + dur, ("finish", rt.nid, rt.version))
+
+    # ----------------------------------------------------- heuristic plumbing
+    def _emit_report(self, rt: _NodeRT, msg, t: float) -> None:
+        ready = rt.rm.offer(msg, t)
+        for m in ready:
+            self._push(t + self.latency, ("ctrl", m))
+        dl = rt.rm.next_deadline()
+        if dl is not None:
+            self._push(dl, ("rm_poll", rt.nid))
+
+    def _block_node(self, rt: _NodeRT, t: float, blockers: Set[int],
+                    done: bool = False) -> None:
+        rt.state = _NState.DONE if done else _NState.BLOCKED
+        if self.controller is not None:
+            p_g = rt.op.power_w - rt.spec.lut.idle_w  # §V-A power gain
+            self._emit_report(rt, blocked_report(rt.nid, blockers, p_g, t), t)
+
+    def _try_advance(self, rt: _NodeRT, t: float) -> None:
+        """Start the node's next job, or block/finish."""
+        job = rt.current
+        if job is None:
+            if rt.state != _NState.DONE:
+                self._block_node(rt, t, set(), done=True)
+            return
+        if self._deps_ready(job):
+            was_blocked = rt.state == _NState.BLOCKED
+            self._start_job(rt, t)
+            if self.controller is not None and was_blocked:
+                self._emit_report(rt, running_report(rt.nid, t), t)
+        else:
+            pending = [d for d in job.deps if d not in self.completed]
+            for d in pending:
+                self.waiters.setdefault(d, []).append(rt.nid)
+            blockers = {d[0] for d in pending if d[0] != rt.nid}
+            self._block_node(rt, t, blockers)
+
+    # -------------------------------------------------------------- run loop
+    def run(self) -> SimResult:
+        t = 0.0
+        self._account_power(t)
+        for rt in self.nodes.values():
+            self._try_advance(rt, t)
+        self._account_power(t)
+
+        events = 0
+        while self._heap:
+            events += 1
+            if events > self.max_events:
+                raise RuntimeError("simulator exceeded max events "
+                                   f"({self.max_events}); livelock?")
+            t, _seq, ev = heapq.heappop(self._heap)
+            self._now = t
+            kind = ev[0]
+            if kind == "finish":
+                _, nid, version = ev
+                rt = self.nodes[nid]
+                if version != rt.version or rt.state != _NState.RUNNING:
+                    continue  # stale (rescheduled) event
+                job = rt.current
+                self._update_progress(rt, t)
+                if rt.remaining > 1e-9:   # rate changed since scheduling
+                    self._reschedule(rt, t)
+                    continue
+                self.completed.add(job.job_id)
+                self.job_ends[job.job_id] = t
+                rt.ptr += 1
+                self._try_advance(rt, t)
+                # wake waiters of this job
+                for wnid in self.waiters.pop(job.job_id, []):
+                    wrt = self.nodes[wnid]
+                    if wrt.state == _NState.BLOCKED and wrt.current is not None \
+                            and self._deps_ready(wrt.current):
+                        self._try_advance(wrt, t)
+                self._account_power(t)
+                if len(self.completed) == len(self.graph):
+                    break  # drain: only in-flight messages remain
+            elif kind == "rm_poll":
+                _, nid = ev
+                rt = self.nodes[nid]
+                for m in rt.rm.poll(t):
+                    self._push(t + self.latency, ("ctrl", m))
+                dl = rt.rm.next_deadline()
+                if dl is not None and dl > t:
+                    self._push(dl, ("rm_poll", nid))
+            elif kind == "ctrl":
+                _, msg = ev
+                for gamma in self.controller.process_message(msg):
+                    self._push(t + self.latency,
+                               ("cap", gamma.node, gamma.power_bound_w))
+            elif kind == "cap":
+                _, nid, cap = ev
+                rt = self.nodes[nid]
+                self._update_progress(rt, t)
+                rt.cap_w = cap
+                new_op = operating_point(rt.spec.lut, cap)
+                if new_op != rt.op:
+                    rt.op = new_op
+                    self._reschedule(rt, t)
+                self._account_power(t)
+            else:  # pragma: no cover
+                raise AssertionError(f"unknown event {kind}")
+
+        if len(self.completed) != len(self.graph):
+            missing = set(self.graph.jobs) - self.completed
+            raise RuntimeError(f"deadlock: jobs never ran: "
+                               f"{sorted(missing)[:8]}")
+        makespan = max(self.job_ends.values(), default=0.0)
+        # close the energy integral at makespan
+        self._account_power(makespan)
+        ctrl = self.controller
+        return SimResult(
+            policy=self.policy,
+            makespan=makespan,
+            energy_j=self._energy,
+            avg_power_w=self._energy / makespan if makespan > 0 else 0.0,
+            peak_power_w=self._peak,
+            over_budget_time=self._over_budget_time,
+            messages=ctrl.messages_processed if ctrl else 0,
+            distributes=ctrl.distributes_sent if ctrl else 0,
+            suppressed_reports=sum(rt.rm.suppressed
+                                   for rt in self.nodes.values()
+                                   if rt.rm is not None) if ctrl else 0,
+            power_trace=self._power_trace,
+            job_starts=self.job_starts,
+            job_ends=self.job_ends,
+        )
+
+
+def simulate(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
+             cluster_bound_w: float, policy: str = "equal-share",
+             assignment: Optional[PowerAssignment] = None,
+             latency_s: float = 0.05) -> SimResult:
+    """One-call façade used by benchmarks and tests."""
+    return Simulator(graph, specs, cluster_bound_w, policy=policy,
+                     assignment=assignment, latency_s=latency_s).run()
+
+
+def compare_policies(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
+                     cluster_bound_w: float, latency_s: float = 0.05,
+                     ilp_time_limit: float = 60.0,
+                     use_makespan_milp: bool = False) -> Dict[str, SimResult]:
+    """Run equal-share, ILP and heuristic on the same workload (§VI)."""
+    from .ilp import build_makespan_milp, solve_paper_ilp
+
+    results: Dict[str, SimResult] = {}
+    results["equal-share"] = simulate(graph, specs, cluster_bound_w,
+                                      "equal-share", latency_s=latency_s)
+    solver = build_makespan_milp if use_makespan_milp else solve_paper_ilp
+    assignment = solver(graph, specs, cluster_bound_w,
+                        time_limit=ilp_time_limit)
+    results["ilp"] = simulate(graph, specs, cluster_bound_w, "ilp",
+                              assignment=assignment, latency_s=latency_s)
+    results["heuristic"] = simulate(graph, specs, cluster_bound_w,
+                                    "heuristic", latency_s=latency_s)
+    return results

@@ -1,0 +1,377 @@
+"""Workload graphs: the paper's running example, an MPI-trace builder, and
+NPB-analogue generators (paper §II, §III-C, §VI, §VII-B).
+
+``listing2_graph`` reproduces the paper's 15-job example (Listing 2 /
+Fig. 4) with hand-coded edges that match Tables I and II exactly.  The
+paper's figure gives only some execution times in prose ("the execution
+time of jobs J_,1 ... are 2, 3, and 1", "all J_,2 start after 3 time
+units", "total execution time is 19", "the longest execution path starts
+with J_{2,1}", "the last jobs to complete are J_{2,5} and J_{3,5}"); the
+default times below are reconstructed to satisfy *every* stated fact.
+
+``TraceBuilder`` is the graph-construction analogue of the paper's MPI
+wrapper (§VII-A1): callers describe each node's execution as compute
+segments ending in communication ops, and the builder derives the
+dependency edges — no knowledge of the "program" beyond its comm calls.
+
+Dependency-attachment convention: a receiving op (recv or any collective)
+ending segment k of node i makes job (i, k+1) depend on the producing jobs.
+The paper draws node 1's lone-recv job (J_{1,3}) with the dependency on the
+recv job itself because that job *is* the recv; the hand-coded
+``listing2_graph`` keeps the paper's exact edges, while builder-generated
+graphs use the uniform next-job convention.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .graph import Job, JobDependencyGraph, JobId
+
+# ----------------------------------------------------------------- Listing 2
+#: Reconstructed nominal execution times for Fig. 4 (see module docstring).
+LISTING2_TIMES: Dict[JobId, float] = {
+    # J_{node, job}: nodes 1..3 (paper table numbering), jobs 1..5
+    (1, 1): 2.0, (2, 1): 3.0, (3, 1): 1.0,   # stated in §IV-B
+    (1, 2): 2.0, (2, 2): 2.0, (3, 2): 4.0,
+    (1, 3): 1.0, (2, 3): 1.0, (3, 3): 1.0,
+    (1, 4): 3.0, (2, 4): 4.0, (3, 4): 2.0,
+    (1, 5): 5.0, (2, 5): 7.0, (3, 5): 7.0,
+}
+
+
+def listing2_graph(times: Optional[Mapping[JobId, float]] = None,
+                   cpu_frac: float = 1.0) -> JobDependencyGraph:
+    """The paper's running example: bcast, ring send/recv, reduce, finalize.
+
+    15 jobs on 3 nodes.  Edges are exactly those of Fig. 4:
+      * bcast barrier: every J_{*,2} depends on every J_{*,1};
+      * ring: J_{2,3} <- J_{1,2};  J_{3,3} <- J_{2,3};  J_{1,3} <- J_{3,3};
+      * reduce barrier: every J_{*,5} depends on every J_{*,4};
+      * serial order within each node.
+    """
+    t = dict(LISTING2_TIMES)
+    if times:
+        t.update(times)
+    g = JobDependencyGraph()
+    nodes = (1, 2, 3)
+    for i in nodes:
+        g.add(i, 1, t[(i, 1)], deps=(), cpu_frac=cpu_frac, tag="bcast")
+    for i in nodes:
+        deps = [(k, 1) for k in nodes if k != i] + [(i, 1)]
+        tag = "send" if i == 1 else "recv"
+        g.add(i, 2, t[(i, 2)], deps=deps, cpu_frac=cpu_frac, tag=tag)
+    # ring: node1 sends to node2, node2 to node3, node3 to node1
+    g.add(2, 3, t[(2, 3)], deps=[(2, 2), (1, 2)], cpu_frac=cpu_frac, tag="send")
+    g.add(3, 3, t[(3, 3)], deps=[(3, 2), (2, 3)], cpu_frac=cpu_frac, tag="send")
+    g.add(1, 3, t[(1, 3)], deps=[(1, 2), (3, 3)], cpu_frac=cpu_frac, tag="recv")
+    for i in nodes:
+        g.add(i, 4, t[(i, 4)], deps=[(i, 3)], cpu_frac=cpu_frac, tag="reduce")
+    for i in nodes:
+        deps = [(k, 4) for k in nodes if k != i] + [(i, 4)]
+        g.add(i, 5, t[(i, 5)], deps=deps, cpu_frac=cpu_frac, tag="finalize")
+    g.validate()
+    return g
+
+
+def listing2_uniform(work: float = 10.0) -> JobDependencyGraph:
+    """§VI homogeneous variant: same graph, every job the same size."""
+    return listing2_graph({jid: work for jid in LISTING2_TIMES})
+
+
+def listing2_random(stddev: float, mean: float = 10.0,
+                    seed: int = 0) -> JobDependencyGraph:
+    """Fig. 9 variant: same structure, times ~ N(mean, stddev), floored."""
+    rng = random.Random(seed)
+    times = {jid: max(0.5, rng.gauss(mean, stddev))
+             for jid in LISTING2_TIMES}
+    return listing2_graph(times)
+
+
+# ------------------------------------------------------------- TraceBuilder
+@dataclass
+class _Segment:
+    work: float
+    cpu_frac: float
+    op: Optional[Tuple] = None  # ("coll", name, group) | ("send", dst) | ("recv", src)
+
+
+class TraceBuilder:
+    """Builds a job dependency graph from per-node comm traces (§VII-A1).
+
+    Usage::
+
+        tb = TraceBuilder()
+        tb.compute(node, work).allreduce(group)   # via per-node handles
+    """
+
+    def __init__(self, n_nodes: int):
+        self.n = n_nodes
+        self._traces: List[List[_Segment]] = [[] for _ in range(n_nodes)]
+
+    # trace-recording API ---------------------------------------------------
+    def compute(self, node: int, work: float, cpu_frac: float = 1.0) -> None:
+        """Append a compute segment (a future job) to a node's trace."""
+        self._traces[node].append(_Segment(work, cpu_frac))
+
+    def _end_with(self, node: int, op: Tuple) -> None:
+        if not self._traces[node] or self._traces[node][-1].op is not None:
+            # an op with no preceding compute gets an epsilon job (e.g. a
+            # bare recv like the paper's J_{1,3})
+            self._traces[node].append(_Segment(0.0, 1.0))
+        self._traces[node][-1].op = op
+
+    def collective(self, name: str, group: Sequence[int]) -> None:
+        """All nodes in ``group`` hit collective ``name`` (in trace order)."""
+        for node in group:
+            self._end_with(node, ("coll", name, tuple(sorted(group))))
+
+    def send(self, src: int, dst: int) -> None:
+        self._end_with(src, ("send", dst))
+
+    def recv(self, dst: int, src: int) -> None:
+        self._end_with(dst, ("recv", src))
+
+    # compilation -----------------------------------------------------------
+    def build(self) -> JobDependencyGraph:
+        g = JobDependencyGraph()
+        # Give every trace a terminal segment so trailing ops have a
+        # successor job to carry their dependency.
+        for node, trace in enumerate(self._traces):
+            if trace and trace[-1].op is not None:
+                trace.append(_Segment(0.0, 1.0))
+
+        # Pass 1: create jobs with serial deps.
+        for node, trace in enumerate(self._traces):
+            for k, seg in enumerate(trace):
+                deps = [(node, k - 1)] if k > 0 else []
+                tag = seg.op[0] if seg.op else ""
+                if seg.op and seg.op[0] == "coll":
+                    tag = seg.op[1]
+                g.add(node, k, seg.work, deps=deps, cpu_frac=seg.cpu_frac,
+                      tag=tag)
+
+        # Pass 2: cross-node deps.  Collectives match by occurrence order
+        # within the same (name, group); sends/recvs FIFO per (src, dst).
+        coll_seen: Dict[Tuple, List[List[JobId]]] = {}
+        sends: Dict[Tuple[int, int], List[JobId]] = {}
+        recvs: Dict[Tuple[int, int], List[JobId]] = {}
+        for node, trace in enumerate(self._traces):
+            coll_count: Dict[Tuple, int] = {}
+            for k, seg in enumerate(trace):
+                if seg.op is None:
+                    continue
+                kind = seg.op[0]
+                if kind == "coll":
+                    _, name, group = seg.op
+                    key = (name, group)
+                    idx = coll_count.get(key, 0)
+                    coll_count[key] = idx + 1
+                    coll_seen.setdefault(key, [])
+                    while len(coll_seen[key]) <= idx:
+                        coll_seen[key].append([])
+                    coll_seen[key][idx].append((node, k))
+                elif kind == "send":
+                    sends.setdefault((node, seg.op[1]), []).append((node, k))
+                elif kind == "recv":
+                    recvs.setdefault((seg.op[1], node), []).append((node, k))
+
+        extra: Dict[JobId, List[JobId]] = {}
+
+        def add_dep(child: JobId, dep: JobId) -> None:
+            extra.setdefault(child, []).append(dep)
+
+        for key, occurrences in coll_seen.items():
+            _, group = key
+            for members in occurrences:
+                if {m[0] for m in members} != set(group):
+                    raise ValueError(
+                        f"collective {key} mismatched across nodes: {members}")
+                for (node, k) in members:
+                    for (other, ko) in members:
+                        if other != node:
+                            add_dep((node, k + 1), (other, ko))
+        for (src, dst), send_jobs in sends.items():
+            recv_jobs = recvs.get((src, dst), [])
+            if len(recv_jobs) != len(send_jobs):
+                raise ValueError(
+                    f"unmatched send/recv {src}->{dst}: "
+                    f"{len(send_jobs)} sends, {len(recv_jobs)} recvs")
+            for s_jid, r_jid in zip(send_jobs, recv_jobs):
+                add_dep((r_jid[0], r_jid[1] + 1), s_jid)
+
+        # Rebuild with merged deps (jobs are frozen dataclasses).
+        g2 = JobDependencyGraph()
+        for jid, job in g.jobs.items():
+            deps = list(job.deps) + [d for d in extra.get(jid, [])
+                                     if d not in job.deps]
+            g2.add(job.node, job.index, job.work, deps=deps,
+                   cpu_frac=job.cpu_frac, tag=job.tag)
+        g2.topological_order()
+        return g2
+
+
+# ------------------------------------------------------------ NPB analogues
+#: NPB-style problem classes: work multiplier per class.
+NPB_CLASSES = {"A": 1.0, "B": 4.0, "C": 16.0}
+
+
+def _skew(rng: random.Random, spread: float) -> float:
+    return rng.uniform(1.0 - spread, 1.0 + spread)
+
+
+def is_like(n_nodes: int, klass: str = "A", iterations: int = 4,
+            seed: int = 1) -> JobDependencyGraph:
+    """Integer-Sort analogue (§VII-B): memory-intensive, alltoall-heavy.
+
+    Each iteration mirrors NPB IS ``rank()`` (paper Listing 1): bucket
+    count (compute) -> Allreduce -> key redistribution (compute) ->
+    Alltoall -> Alltoallv -> local ranking (compute).  cpu_frac is low
+    (memory-bound), so frequency boosts help moderately — the paper sees
+    modest IS speedups that improve with class size.
+    """
+    scale = NPB_CLASSES[klass]
+    rng = random.Random(seed)
+    tb = TraceBuilder(n_nodes)
+    group = list(range(n_nodes))
+    for _ in range(iterations):
+        for node in range(n_nodes):
+            tb.compute(node, 6.0 * scale * _skew(rng, 0.35), cpu_frac=0.45)
+        tb.collective("allreduce", group)
+        for node in range(n_nodes):
+            tb.compute(node, 3.0 * scale * _skew(rng, 0.35), cpu_frac=0.40)
+        tb.collective("alltoall", group)
+        for node in range(n_nodes):
+            tb.compute(node, 2.0 * scale * _skew(rng, 0.50), cpu_frac=0.40)
+        tb.collective("alltoallv", group)
+        for node in range(n_nodes):
+            tb.compute(node, 4.0 * scale * _skew(rng, 0.35), cpu_frac=0.50)
+    tb.collective("barrier", group)
+    return tb.build()
+
+
+def ep_like(n_nodes: int, klass: str = "A", seed: int = 2) -> JobDependencyGraph:
+    """Embarrassingly-Parallel analogue: one huge CPU-bound block + reduces.
+
+    The paper's best case (heuristic 2.25x, ILP 2.78x at class C): long
+    independent compute with large cross-node skew means early finishers
+    idle for a long time unless their power moves to the stragglers.
+    """
+    scale = NPB_CLASSES[klass]
+    rng = random.Random(seed)
+    tb = TraceBuilder(n_nodes)
+    group = list(range(n_nodes))
+    for node in range(n_nodes):
+        tb.compute(node, 60.0 * scale * _skew(rng, 0.45), cpu_frac=0.95)
+    tb.collective("allreduce", group)
+    for _ in range(3):
+        for node in range(n_nodes):
+            tb.compute(node, 1.0 * scale * _skew(rng, 0.20), cpu_frac=0.90)
+        tb.collective("allreduce", group)
+    return tb.build()
+
+
+def cg_like(n_nodes: int, klass: str = "A", iterations: int = 15,
+            seed: int = 3) -> JobDependencyGraph:
+    """Conjugate-Gradient analogue: communication-intensive halo exchanges.
+
+    Many short compute blocks separated by neighbour send/recv and a
+    reduction per iteration.  Jobs are small relative to controller RTT, so
+    the debounced heuristic barely acts (paper Fig. 13: speedup ~= 1.0,
+    worst observed 0.98).
+    """
+    scale = NPB_CLASSES[klass]
+    rng = random.Random(seed)
+    tb = TraceBuilder(n_nodes)
+    group = list(range(n_nodes))
+    iters = int(iterations * math.sqrt(scale))
+    for _ in range(iters):
+        for node in range(n_nodes):
+            tb.compute(node, 0.8 * _skew(rng, 0.30), cpu_frac=0.65)
+        # ring halo exchange
+        for node in range(n_nodes):
+            tb.send(node, (node + 1) % n_nodes)
+        for node in range(n_nodes):
+            tb.recv(node, (node - 1) % n_nodes)
+        for node in range(n_nodes):
+            tb.compute(node, 0.5 * _skew(rng, 0.30), cpu_frac=0.65)
+        tb.collective("allreduce", group)
+    return tb.build()
+
+
+def pipeline_graph(stages: int, microbatches: int, fwd_work: float = 4.0,
+                   bwd_work: float = 8.0, skew: float = 0.0,
+                   seed: int = 4) -> JobDependencyGraph:
+    """GPipe-style pipeline schedule as a dependency graph.
+
+    Node = pipeline stage.  Forward microbatch m at stage s depends on
+    (s-1, m) fwd and the stage's previous job; backward reversed.  The
+    warm-up/drain bubbles are exactly the paper's "blackouts": with no
+    power redistribution the bubble stages idle at p_o while the busy
+    stages are capped — redistribution shortens the critical path.
+    """
+    rng = random.Random(seed)
+    g = JobDependencyGraph()
+    idx = [0] * stages
+    fwd_id: Dict[Tuple[int, int], JobId] = {}
+    bwd_id: Dict[Tuple[int, int], JobId] = {}
+
+    def push(stage: int, work: float, deps: List[JobId], tag: str) -> JobId:
+        k = idx[stage]
+        idx[stage] += 1
+        if k > 0:
+            deps = deps + [(stage, k - 1)]
+        g.add(stage, k, work, deps=deps, cpu_frac=0.9, tag=tag)
+        return (stage, k)
+
+    for m in range(microbatches):
+        for s in range(stages):
+            deps = [fwd_id[(s - 1, m)]] if s > 0 else []
+            w = fwd_work * (1.0 + rng.uniform(-skew, skew))
+            fwd_id[(s, m)] = push(s, w, deps, f"fwd{m}")
+    for m in range(microbatches):
+        for s in reversed(range(stages)):
+            deps = [bwd_id[(s + 1, m)]] if s < stages - 1 else \
+                [fwd_id[(stages - 1, m)]]
+            w = bwd_work * (1.0 + rng.uniform(-skew, skew))
+            bwd_id[(s, m)] = push(s, w, deps, f"bwd{m}")
+    # gradient all-reduce: every stage's final job joins a barrier
+    final = [(s, idx[s] - 1) for s in range(stages)]
+    for s in range(stages):
+        deps = [f for f in final if f[0] != s] + [(s, idx[s] - 1)]
+        g.add(s, idx[s], fwd_work * 0.25, deps=deps, cpu_frac=0.3,
+              tag="allreduce")
+        idx[s] += 1
+    g.topological_order()
+    return g
+
+
+def moe_step_graph(n_nodes: int, layers: int = 4, hot_factor: float = 2.5,
+                   seed: int = 5) -> JobDependencyGraph:
+    """An MoE training step: per-layer alltoall with hot-expert imbalance.
+
+    Node = expert-parallel rank.  Each layer: attention compute (balanced)
+    -> dispatch alltoall -> expert FFN compute (imbalanced: the rank
+    holding the hot expert gets ``hot_factor`` more work) -> combine
+    alltoall.  Final DP gradient allreduce.  This is the LM-workload face
+    of the paper's technique (see DESIGN.md §4).
+    """
+    rng = random.Random(seed)
+    tb = TraceBuilder(n_nodes)
+    group = list(range(n_nodes))
+    for layer in range(layers):
+        hot = rng.randrange(n_nodes)
+        for node in range(n_nodes):
+            tb.compute(node, 3.0 * _skew(rng, 0.05), cpu_frac=0.85)
+        tb.collective("alltoall", group)
+        for node in range(n_nodes):
+            w = 4.0 * (hot_factor if node == hot else 1.0) * _skew(rng, 0.10)
+            tb.compute(node, w, cpu_frac=0.9)
+        tb.collective("alltoall", group)
+    for node in range(n_nodes):
+        tb.compute(node, 2.0, cpu_frac=0.5)
+    tb.collective("allreduce", group)
+    return tb.build()

@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (GQA, causal) with explicit VMEM tiling.
+
+Grid: (batch, q_head, q_blocks, kv_blocks) — kv innermost so the online
+softmax state (m, l, acc) persists in VMEM scratch across kv steps and
+the output block is written once on the last kv step.  K/V BlockSpecs
+index the *kv head* (q_head // group) so grouped queries share K/V tiles
+without materialising them per-head.
+
+Layout: q (B, H, S, dh); k/v (B, Hkv, S, dh) — the ops.py wrapper
+transposes from the model's (B, S, H, dh).  Block sizes default to the
+MXU-aligned 128; dh is kept whole per tile (<= 256 for all assigned
+archs).
+
+Validated against ``ref.flash_attention_ref`` in interpret mode (CPU);
+on TPU the same pallas_call compiles to a fused MXU kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, scale: float, block_q: int, block_kv: int,
+                  n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (B,H,S,dh); k/v (B,Hkv,S,dh) -> (B,H,S,dh)."""
+    B, H, S, dh = q.shape
+    Hkv = k.shape[1]
+    Sk = k.shape[2]
+    group = H // Hkv
+    bq = min(block_q, S)
+    bk = min(block_kv, Sk)
+    if S % bq or Sk % bk:
+        raise ValueError(f"S={S}/Sk={Sk} must divide blocks ({bq},{bk})")
+    n_q, n_kv = S // bq, Sk // bk
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale, block_q=bq,
+        block_kv=bk, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests; on TPU backends the compiled kernels run natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+from . import ssm_scan as _ss
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_kv: int = _fa.DEFAULT_BLOCK_KV,
+                    interpret: bool | None = None):
+    """Model-layout wrapper: q (B,S,H,dh); k/v (B,S,Hkv,dh)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
+                              block_kv=block_kv, interpret=interp)
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, gamma, *, eps: float = 1e-5,
+            block_rows: int = _rn.DEFAULT_BLOCK_ROWS,
+            interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _rn.rmsnorm(x, gamma, eps=eps, block_rows=block_rows,
+                       interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x, a, dt, Bm, Cm, *, chunk: int = _ss.DEFAULT_CHUNK,
+             interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _ss.ssm_scan(x, a, dt, Bm, Cm, chunk=chunk, interpret=interp)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the interpret-mode kernel tests assert
+against (assert_allclose over shape/dtype sweeps).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """q (B,Sq,H,dh); k/v (B,Sk,Hkv,dh); GQA; fp32 softmax."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / jnp.sqrt(
+        jnp.float32(dh))
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), Sk - Sq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, gamma: jnp.ndarray,
+                eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_scan_ref(x: jnp.ndarray, a: jnp.ndarray, dt: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """Selective-scan oracle: h_t = e^{a_t} h_{t-1} + dt_t B_t (x) x_t;
+    y_t = C_t . h_t.
+
+    x (B,S,H,P); a/dt (B,S,H); Bm/Cm (B,S,N) -> y (B,S,H,P), fp32.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, at, dtt, bt, ct = inp
+        h = jnp.exp(at)[..., None, None] * h + \
+            jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

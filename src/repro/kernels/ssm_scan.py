@@ -1,0 +1,78 @@
+"""Pallas TPU selective-scan kernel (Mamba2-style recurrence).
+
+    h_t = exp(a_t) * h_{t-1} + dt_t * (B_t outer x_t);   y_t = C_t . h_t
+
+Grid: (batch, head, seq_chunks) — seq innermost, so the (P, N) state
+lives in VMEM scratch and persists across chunk steps; it re-initialises
+whenever a new (batch, head) pair starts.  Within a chunk the recurrence
+runs as a fori_loop over VMEM-resident tiles: HBM traffic is exactly one
+read of x/a/dt/B/C and one write of y per element, the roofline minimum
+for a recurrence with O(P*N) state.
+
+(The *training* path uses the chunked SSD matmul form in
+models/ssm.py — this kernel is the long-context decode/streaming
+primitive, where the sequential dependency is irreducible.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+
+
+def _ssm_kernel(x_ref, a_ref, dt_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (chunk, P)
+    a = a_ref[0, 0].astype(jnp.float32)      # (chunk,)
+    dt = dt_ref[0, 0].astype(jnp.float32)    # (chunk,)
+    bm = b_ref[0].astype(jnp.float32)        # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)        # (chunk, N)
+
+    def step(t, carry):
+        h = carry
+        h = jnp.exp(a[t]) * h + dt[t] * jnp.outer(x[t], bm[t])  # (P, N)
+        y_ref[0, 0, t, :] = (h @ cm[t]).astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+
+
+def ssm_scan(x: jnp.ndarray, a: jnp.ndarray, dt: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, *,
+             chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False) -> jnp.ndarray:
+    """x (B,H,S,P); a/dt (B,H,S); Bm/Cm (B,S,N) -> y (B,H,S,P) fp32."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    ch = min(chunk, S)
+    if S % ch:
+        raise ValueError(f"S={S} must divide chunk={ch}")
+    n_chunks = S // ch
+
+    return pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=ch),
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, ch, P), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, ch), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, 1, ch), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, ch, N), lambda b, h, s: (b, s, 0)),
+            pl.BlockSpec((1, ch, N), lambda b, h, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ch, P), lambda b, h, s: (b, h, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, dt, Bm, Cm)

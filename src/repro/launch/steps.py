@@ -1,0 +1,132 @@
+"""Jittable step functions + abstract input specs for every cell kind.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation) for each model input; the dry-run lowers against them, the
+trainer/server feed real arrays of the same structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import decode_step, forward, init_cache, loss_fn
+from ..models.layers import dtype_of
+from ..optim import AdamWConfig, adamw_update, init_opt_state
+
+Pytree = Any
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) cell.
+
+    train   : {tokens|frames, labels}
+    prefill : {tokens|frames}
+    decode  : {tokens (B,1), pos scalar} (cache specs come from
+              ``abstract_cache``)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.family == "encoder":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "encoder":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig) -> Pytree:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    n_microbatches: int = 1, accum_dtype=jnp.float32):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``n_microbatches > 1`` splits the global batch along dim 0 and
+    accumulates gradients with a lax.scan — activation working-set scales
+    1/M (the standard memory lever for the densest cells), and the
+    microbatch boundary doubles as the compute/communication overlap
+    point on real hardware (grad reduce of microbatch i overlaps the
+    forward of i+1 under XLA async collectives).
+    """
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        grad_scale = 1.0
+        if n_microbatches == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            def split(v):
+                return v.reshape((n_microbatches,
+                                  v.shape[0] // n_microbatches)
+                                 + v.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, parts), grads = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(accum_dtype), g_acc, grads)
+                return (g_acc, loss_acc + loss,
+                        aux_acc + parts["moe_aux"]), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (g_acc, loss_sum, aux_sum), _ = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0.0), jnp.float32(0.0)), micro)
+            # pass the raw sum; 1/M folds into the optimizer's fused
+            # scale+clip factor — no divided copy of the gradient pytree
+            grads = g_acc
+            grad_scale = 1.0 / n_microbatches
+            loss = loss_sum / n_microbatches
+            parts = {"xent": loss, "moe_aux": aux_sum / n_microbatches}
+        params, opt_state, metrics = adamw_update(
+            params, grads, opt_state, step, opt_cfg,
+            grad_scale=grad_scale)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics.update(parts)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) -> logits  (inference prefill)."""
+
+    def prefill_step(params, batch):
+        logits, _aux = forward(cfg, params, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, cache, tokens, pos) -> (next_tokens, logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = decode_step(cfg, params, cache, tokens, pos)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens, logits, cache
+
+    return serve_step

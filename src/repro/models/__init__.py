@@ -1,0 +1,7 @@
+"""Model zoo: every assigned architecture family, pure-functional JAX."""
+
+from .model import (abstract_params, decode_step, forward, init_cache,
+                    init_params, loss_fn, superblock_shape)
+
+__all__ = ["abstract_params", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "superblock_shape"]

@@ -1,0 +1,118 @@
+"""Shared neural building blocks (pure-functional JAX).
+
+Everything takes explicit parameter pytrees; no framework objects.  Naming
+follows the standard decoder stack: RMSNorm pre-norm, RoPE, SwiGLU.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ------------------------------------------------------------------- init
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return _normal(key, (d_in, d_out), scale, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return _normal(key, (vocab, d), 0.02, dtype)
+
+
+# ---------------------------------------------------------------- rmsnorm
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5):
+    """RMSNorm in fp32 accumulation regardless of input dtype."""
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.ones((d,), dtype)
+
+
+# ------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ swiglu
+def swiglu_init(key, d: int, ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, d, ff, dtype),
+            "wg": dense_init(k2, d, ff, dtype),
+            "wo": dense_init(k3, ff, d, dtype)}
+
+
+def swiglu(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    return h @ params["wo"]
+
+
+# ------------------------------------------------------------ gelu 2-proj
+def gelu_mlp_init(key, d: int, ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d, ff, dtype),
+            "wo": dense_init(k2, ff, d, dtype)}
+
+
+def gelu_mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ params["wi"]) @ params["wo"]
+
+
+def mlp_init(kind: str, key, d: int, ff: int, dtype) -> Params:
+    return (swiglu_init if kind == "swiglu" else gelu_mlp_init)(
+        key, d, ff, dtype)
+
+
+def mlp_apply(kind: str, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (swiglu if kind == "swiglu" else gelu_mlp)(params, x)
+
+
+# ----------------------------------------------------------- loss helpers
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 ignore_id: int = -1) -> jnp.ndarray:
+    """Mean next-token cross-entropy in fp32; labels == ignore_id masked.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis: with vocab-sharded logits the gather would force an
+    all-gather of the full logits, while the contraction reduces over the
+    sharded vocab dim locally (partial sums + a tiny all-reduce).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

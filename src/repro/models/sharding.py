@@ -1,0 +1,58 @@
+"""Activation-sharding policy hook.
+
+Model code is mesh-agnostic; the launcher installs a policy mapping the
+logical axes ("dp" = batch/fsdp axes, "mdl" = tensor axis) to mesh axes,
+and ``constrain`` places ``with_sharding_constraint`` on key activations
+(embedding output, per-layer residual stream, logits, MoE dispatch
+buffers).  Without a policy (CPU smoke tests) it is the identity.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_LOCAL = threading.local()
+
+
+def set_policy(mesh, dp, mdl: str = "model") -> None:
+    _LOCAL.policy = (mesh, dp, mdl)
+
+
+def clear_policy() -> None:
+    _LOCAL.policy = None
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """constrain(x, 'dp', None, 'mdl') -> sharding constraint on x.
+
+    Logical entries: 'dp', 'mdl', or None.  Axes that do not divide the
+    corresponding dimension are dropped (replicated) rather than erroring.
+    """
+    policy = getattr(_LOCAL, "policy", None)
+    if policy is None:
+        return x
+    mesh, dp, mdl = policy
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axes = {"dp": dp, "mdl": mdl, None: None}[name]
+        if axes is not None and dim % _axis_size(mesh, axes) == 0:
+            spec.append(axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

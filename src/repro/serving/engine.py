@@ -1,0 +1,106 @@
+"""Batched serving engine: prefill + decode with KV cache and sampling.
+
+``ServeEngine`` keeps aligned batch lanes (all lanes decode the same
+position — the layout the dry-run's ``serve_step`` lowers at scale).
+Prefill runs as a compiled lax.scan of the single-token decode step over
+prompt positions: one compilation, works for *every* family (attention
+caches, Mamba2 states, xLSTM states) — a chunked parallel prefill is a
+perf optimisation left to the kernel path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import decode_step, init_cache
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, prompt + generated)
+    new_tokens: np.ndarray      # (B, generated)
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 max_batch: int):
+        if cfg.family == "encoder":
+            raise ValueError("encoder-only architectures have no decode "
+                             "step (see DESIGN.md §Arch-applicability)")
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.max_batch = max_batch
+
+        def _decode(params, cache, tokens, pos):
+            return decode_step(cfg, params, cache, tokens, pos)
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+        def _prefill(params, cache, tokens):
+            """Scan the decode step over prompt positions."""
+            S = tokens.shape[1]
+
+            def body(carry, i):
+                cache, _last = carry
+                logits, cache = decode_step(cfg, params, cache,
+                                            jax.lax.dynamic_slice_in_dim(
+                                                tokens, i, 1, axis=1),
+                                            i)
+                return (cache, logits), None
+
+            zero_logits = jnp.zeros(
+                (tokens.shape[0], 1, cfg.vocab),
+                logits_dtype(cfg))
+            (cache, last), _ = jax.lax.scan(
+                body, (cache, zero_logits), jnp.arange(S, dtype=jnp.int32))
+            return cache, last
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 temperature: float = 0.0, seed: int = 0
+                 ) -> GenerationResult:
+        """prompts: (B, S) int32, right-aligned equal-length batch."""
+        B, S = prompts.shape
+        assert B <= self.max_batch and S + max_new <= self.max_seq
+        cache = init_cache(self.cfg, B, self.max_seq)
+        tokens = jnp.asarray(prompts, jnp.int32)
+        cache, logits = self._prefill(self.params, cache, tokens)
+
+        key = jax.random.PRNGKey(seed)
+        out: List[jnp.ndarray] = []
+        cur = _sample(logits[:, -1], temperature, key)
+        out.append(cur)
+        for i in range(1, max_new):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache,
+                                         cur[:, None],
+                                         jnp.int32(S + i - 1))
+            cur = _sample(logits[:, -1], temperature, sub)
+            out.append(cur)
+        new = np.stack([np.asarray(t) for t in out], axis=1)
+        return GenerationResult(
+            tokens=np.concatenate([np.asarray(prompts), new], axis=1),
+            new_tokens=new, steps=max_new)
+
+
+def _sample(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+def logits_dtype(cfg: ModelConfig):
+    from ..models.layers import dtype_of
+
+    return dtype_of(cfg.dtype)

@@ -1,0 +1,44 @@
+"""End-to-end dry-run CLI test: compiles one real cell against the
+production mesh in a subprocess (the XLA_FLAGS device-count override
+requires a fresh interpreter) and checks the artifact schema."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("arch,shape", [("xlstm-350m", "decode_32k")])
+def test_dryrun_cell_subprocess(tmp_path, arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    artifact = tmp_path / f"{arch}__{shape}__pod16x16.json"
+    assert artifact.exists()
+    rec = json.loads(artifact.read_text())
+    assert rec["n_devices"] == 256
+    assert rec["peak_bytes_per_device"] > 0
+    assert rec["cost"].get("flops", 0) > 0
+    assert "collectives_per_device_loop_corrected" in rec
+
+
+def test_skip_cell_reports_reason(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "hubert-xlarge", "--shape", "decode_32k", "--out",
+         str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0
+    assert "skip: encoder-only" in proc.stdout

@@ -1,0 +1,234 @@
+"""Online heuristic (Algorithm 1) + simulator tests, validating the
+paper's qualitative claims:
+
+* speedup > 1 at tight bounds, -> 1.0 as the bound relaxes (Fig. 8);
+* speedup grows with execution-time stddev (Fig. 9);
+* EP-like >> IS-like > CG-like ~ 1.0 (Figs. 11-13), heuristic never
+  catastrophically harmful on CG (paper worst case 0.98);
+* heuristic avg power slightly above equal-share (§VII-C observation);
+* debounce suppresses report pairs shorter than the break-even RTT.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (NodeState, PowerDistributionController, ReportManager,
+                        blocked_report, cg_like, compare_policies, ep_like,
+                        heterogeneous_cluster, homogeneous_cluster, is_like,
+                        listing2_graph, listing2_random, listing2_uniform,
+                        moe_step_graph, pipeline_graph, running_report,
+                        simulate)
+from repro.core.power import DUTY_FLOOR
+
+
+def tight_bound(specs, frac=0.10):
+    return sum(s.lut.idle_w + frac * (s.lut.p_min - s.lut.idle_w)
+               for s in specs)
+
+
+def mid_bound(specs):
+    return 0.5 * sum(s.lut.p_max for s in specs)
+
+
+# ----------------------------------------------------------- Algorithm 1
+class TestController:
+    def test_rank_proportional_distribution(self):
+        """A node blocking two others gets twice the boost (Alg. 1 l.41)."""
+        ctrl = PowerDistributionController(cluster_bound_w=12.0, n_nodes=4)
+        ctrl.process_message(running_report(0, 0.0))
+        ctrl.process_message(running_report(1, 0.0))
+        ctrl.process_message(blocked_report(2, {0}, 1.0, 0.0))
+        out = ctrl.process_message(blocked_report(3, {0}, 1.0, 0.0))
+        grants = {m.node: m.power_bound_w for m in out}
+        # node0 blocks two nodes (rank 2), node1 none (rank 0)
+        assert grants[0] == pytest.approx(3.0 + 2.0)
+        assert 1 not in grants or grants[1] == pytest.approx(3.0)
+
+    def test_budget_conservation_without_boosted_blockers(self):
+        """Granted running power + idle draw <= P when blocked nodes were
+        at their equal share before blocking."""
+        specs = homogeneous_cluster(4)
+        P = 8.0
+        ctrl = PowerDistributionController(P, 4, specs=specs)
+        for n in range(4):
+            ctrl.process_message(running_report(n, 0.0))
+        p_o = P / 4
+        pg = p_o - specs[0].lut.idle_w
+        ctrl.process_message(blocked_report(3, {0}, pg, 1.0))
+        total = ctrl.budget_in_use()
+        assert total <= P + 1e-9
+
+    def test_unblock_restores_equal_share(self):
+        ctrl = PowerDistributionController(9.0, 3)
+        ctrl.process_message(running_report(0, 0.0))
+        ctrl.process_message(running_report(1, 0.0))
+        ctrl.process_message(blocked_report(2, {0}, 2.0, 0.0))
+        out = ctrl.process_message(running_report(2, 1.0))
+        grants = {m.node: m.power_bound_w for m in out}
+        assert all(g == pytest.approx(3.0) for g in grants.values())
+
+    def test_unknown_blocker_materialised(self):
+        ctrl = PowerDistributionController(9.0, 3)
+        out = ctrl.process_message(blocked_report(0, {7}, 2.0, 0.0))
+        grants = {m.node: m.power_bound_w for m in out}
+        assert grants[7] == pytest.approx(3.0 + 2.0)
+
+    def test_t_zero_splits_equally(self):
+        """Blocked on an external node: Algorithm 1 would divide by zero;
+        we split the budget equally among running nodes (documented)."""
+        ctrl = PowerDistributionController(9.0, 3)
+        ctrl.process_message(running_report(0, 0.0))
+        ctrl.process_message(running_report(1, 0.0))
+        out = ctrl.process_message(blocked_report(2, set(), 2.0, 0.0))
+        grants = {m.node: m.power_bound_w for m in out}
+        assert grants[0] == pytest.approx(4.0)
+        assert grants[1] == pytest.approx(4.0)
+
+
+class TestReportManager:
+    def test_fast_pair_suppressed(self):
+        rm = ReportManager(node=0, breakeven_s=0.1)
+        assert rm.offer(blocked_report(0, {1}, 1.0, 0.0), 0.0) == []
+        assert rm.offer(running_report(0, 0.05), 0.05) == []
+        assert rm.suppressed == 2
+        assert rm.poll(1.0) == []  # nothing left
+
+    def test_slow_block_reported(self):
+        rm = ReportManager(node=0, breakeven_s=0.1)
+        rm.offer(blocked_report(0, {1}, 1.0, 0.0), 0.0)
+        out = rm.poll(0.1)
+        assert len(out) == 1 and out[0].state == NodeState.BLOCKED
+
+    def test_same_state_update_replaces(self):
+        rm = ReportManager(node=0, breakeven_s=0.1)
+        rm.offer(blocked_report(0, {1}, 1.0, 0.0), 0.0)
+        rm.offer(blocked_report(0, {1, 2}, 1.0, 0.02), 0.02)
+        out = rm.poll(0.2)
+        assert len(out) == 1 and out[0].blockers == {1, 2}
+
+
+# ------------------------------------------------------------- simulator
+class TestSimulatorInvariants:
+    def test_equal_share_matches_analytic_makespan(self):
+        """With static caps the sim must equal the DAG completion-time
+        recurrence exactly."""
+        from repro.core import equal_share_assignment
+
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        for P in (2.0, 6.0, 18.6):
+            eq = equal_share_assignment(g, specs, P)
+            r = simulate(g, specs, P, "equal-share")
+            assert r.makespan == pytest.approx(
+                g.makespan(eq.time_fn()), rel=1e-9)
+
+    def test_all_jobs_complete_each_policy(self):
+        g = is_like(4, "A")
+        specs = heterogeneous_cluster(4)
+        P = mid_bound(specs)
+        for policy in ("equal-share", "heuristic"):
+            r = simulate(g, specs, P, policy)
+            assert len(r.job_ends) == len(g)
+
+    def test_energy_consistency(self):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        r = simulate(g, specs, 6.0, "heuristic")
+        assert r.energy_j == pytest.approx(r.avg_power_w * r.makespan,
+                                           rel=1e-6)
+        assert r.peak_power_w >= r.avg_power_w
+
+    def test_equal_share_never_exceeds_bound(self):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        for P in (3.0, 9.0):
+            r = simulate(g, specs, P, "equal-share")
+            assert r.peak_power_w <= max(
+                P, sum(s.lut.idle_w + DUTY_FLOOR *
+                       (s.lut.p_min - s.lut.idle_w) for s in specs)) + 1e-9
+
+    @given(st.integers(0, 10))
+    @settings(max_examples=10, deadline=None)
+    def test_heuristic_deterministic(self, seed):
+        g = listing2_random(3.0, seed=seed)
+        specs = homogeneous_cluster(3)
+        r1 = simulate(g, specs, 4.0, "heuristic")
+        r2 = simulate(g, specs, 4.0, "heuristic")
+        assert r1.makespan == r2.makespan
+
+
+# -------------------------------------------------- paper claims (Figs 8-13)
+class TestPaperClaims:
+    def test_fig8_speedup_decreases_to_one(self):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        lut = specs[0].lut
+        P_tight = tight_bound(specs)
+        P_max = 3 * lut.p_max
+        res_t = compare_policies(g, specs, P_tight)
+        res_r = compare_policies(g, specs, P_max)
+        s_tight = res_t["heuristic"].speedup_vs(res_t["equal-share"])
+        s_rel = res_r["heuristic"].speedup_vs(res_r["equal-share"])
+        assert s_tight > 1.05
+        assert s_rel == pytest.approx(1.0, abs=0.02)
+        i_tight = res_t["ilp"].speedup_vs(res_t["equal-share"])
+        assert i_tight >= 1.0 - 1e-6
+
+    def test_fig9_speedup_grows_with_stddev(self):
+        specs = homogeneous_cluster(3)
+        P = tight_bound(specs)
+        lo = simulate(listing2_random(0.5, seed=3), specs, P, "heuristic")
+        lo_eq = simulate(listing2_random(0.5, seed=3), specs, P,
+                         "equal-share")
+        hi = simulate(listing2_random(6.0, seed=3), specs, P, "heuristic")
+        hi_eq = simulate(listing2_random(6.0, seed=3), specs, P,
+                         "equal-share")
+        assert (hi_eq.makespan / hi.makespan) > (lo_eq.makespan /
+                                                 lo.makespan)
+
+    def test_ep_beats_is_beats_cg(self):
+        """Figs. 11-13 ordering: CPU-bound gains most, comm-bound ~none."""
+        specs = heterogeneous_cluster(4)
+        P = tight_bound(specs, frac=0.3)
+        sp = {}
+        for name, gen in (("ep", ep_like), ("is", is_like), ("cg", cg_like)):
+            g = gen(4, "A")
+            heu = simulate(g, specs, P, "heuristic")
+            eq = simulate(g, specs, P, "equal-share")
+            sp[name] = eq.makespan / heu.makespan
+        assert sp["ep"] > sp["is"] > sp["cg"]
+        assert sp["cg"] > 0.9  # "minimal negative effect" (paper: 0.98 worst)
+
+    def test_heuristic_avg_power_at_or_above_equal_share(self):
+        """§VII-C: heuristic power is almost always slightly higher."""
+        g = ep_like(4, "A")
+        specs = heterogeneous_cluster(4)
+        P = tight_bound(specs, frac=0.3)
+        heu = simulate(g, specs, P, "heuristic")
+        eq = simulate(g, specs, P, "equal-share")
+        assert heu.avg_power_w >= eq.avg_power_w * 0.95
+
+    def test_cg_debounce_suppresses_reports(self):
+        g = cg_like(3, "A", iterations=8)
+        specs = homogeneous_cluster(3)
+        P = mid_bound(specs)
+        r = simulate(g, specs, P, "heuristic", latency_s=0.5)
+        assert r.suppressed_reports > 0
+
+    def test_pipeline_bubbles_benefit(self):
+        """Pipeline warm-up/drain bubbles are blackouts the controller can
+        exploit even with perfectly balanced stages (paper §VI uniform)."""
+        g = pipeline_graph(stages=4, microbatches=4)
+        specs = homogeneous_cluster(4)
+        P = tight_bound(specs, frac=0.3)
+        heu = simulate(g, specs, P, "heuristic")
+        eq = simulate(g, specs, P, "equal-share")
+        assert eq.makespan / heu.makespan > 1.1
+
+    def test_moe_hot_expert_benefit(self):
+        g = moe_step_graph(4, layers=3, hot_factor=3.0)
+        specs = homogeneous_cluster(4)
+        P = tight_bound(specs, frac=0.3)
+        heu = simulate(g, specs, P, "heuristic")
+        eq = simulate(g, specs, P, "equal-share")
+        assert eq.makespan / heu.makespan > 1.1

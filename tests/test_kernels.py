@@ -1,0 +1,118 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,Hkv,S,dh", [
+        (1, 4, 4, 128, 64),     # MHA
+        (2, 8, 2, 256, 64),     # GQA 4:1
+        (1, 4, 1, 128, 128),    # MQA, MXU-width head
+        (1, 2, 2, 512, 32),     # long-ish seq
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, B, H, Hkv, S, dh, dtype, causal):
+        k1, k2, k3 = jax.random.split(KEY, 3)
+        q = rand(k1, (B, S, H, dh), dtype)
+        k = rand(k2, (B, S, Hkv, dh), dtype)
+        v = rand(k3, (B, S, Hkv, dh), dtype)
+        got = ops.flash_attention(q, k, v, causal=causal, block_q=64,
+                                  block_kv=64, interpret=True)
+        want = ref.flash_attention_ref(
+            jnp.swapaxes(jnp.swapaxes(q, 1, 2), 1, 2), k, v, causal=causal)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol)
+
+    def test_block_size_invariance(self):
+        q = rand(KEY, (1, 256, 4, 64), jnp.float32)
+        k = rand(KEY, (1, 256, 4, 64), jnp.float32)
+        v = rand(KEY, (1, 256, 4, 64), jnp.float32)
+        a = ops.flash_attention(q, k, v, block_q=64, block_kv=64,
+                                interpret=True)
+        b = ops.flash_attention(q, k, v, block_q=128, block_kv=32,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged(self):
+        q = rand(KEY, (1, 100, 4, 64), jnp.float32)
+        with pytest.raises(ValueError):
+            ops.flash_attention(q, q, q, block_q=64, block_kv=64,
+                                interpret=True)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(8, 128), (2, 16, 256), (1, 512),
+                                       (3, 5, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        x = rand(KEY, shape, dtype)
+        gamma = rand(jax.random.PRNGKey(1), (shape[-1],), dtype) + 1.0
+        got = ops.rmsnorm(x, gamma, interpret=True)
+        want = ref.rmsnorm_ref(x, gamma)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol)
+
+    def test_matches_model_layer(self):
+        from repro.models.layers import rmsnorm as model_rmsnorm
+
+        x = rand(KEY, (4, 96), jnp.float32)
+        g = rand(jax.random.PRNGKey(2), (96,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ops.rmsnorm(x, g, interpret=True)),
+            np.asarray(model_rmsnorm(x, g)), rtol=1e-5, atol=1e-5)
+
+
+class TestSSMScan:
+    @pytest.mark.parametrize("B,H,S,P,N,chunk", [
+        (1, 2, 64, 8, 16, 16),
+        (2, 3, 128, 16, 8, 64),
+        (1, 1, 256, 32, 32, 256),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, H, S, P, N, chunk, dtype):
+        ks = jax.random.split(KEY, 5)
+        x = rand(ks[0], (B, H, S, P), dtype)
+        a = -jnp.abs(rand(ks[1], (B, H, S), jnp.float32)) * 0.2
+        dt = jnp.abs(rand(ks[2], (B, H, S), jnp.float32))
+        Bm = rand(ks[3], (B, S, N), dtype)
+        Cm = rand(ks[4], (B, S, N), dtype)
+        got = ops.ssm_scan(x, a, dt, Bm, Cm, chunk=chunk, interpret=True)
+        want = ref.ssm_scan_ref(
+            jnp.moveaxis(x, 1, 2).astype(jnp.float32),
+            jnp.moveaxis(a, 1, 2), jnp.moveaxis(dt, 1, 2), Bm, Cm)
+        want = jnp.moveaxis(want, 1, 2)  # back to (B,H,S,P)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol)
+
+    def test_chunk_invariance(self):
+        ks = jax.random.split(KEY, 5)
+        B, H, S, P, N = 1, 2, 128, 8, 8
+        x = rand(ks[0], (B, H, S, P), jnp.float32)
+        a = -jnp.abs(rand(ks[1], (B, H, S), jnp.float32)) * 0.2
+        dt = jnp.abs(rand(ks[2], (B, H, S), jnp.float32))
+        Bm = rand(ks[3], (B, S, N), jnp.float32)
+        Cm = rand(ks[4], (B, S, N), jnp.float32)
+        y1 = ops.ssm_scan(x, a, dt, Bm, Cm, chunk=32, interpret=True)
+        y2 = ops.ssm_scan(x, a, dt, Bm, Cm, chunk=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
++ one train-style grad step + one decode step on CPU; asserts output
+shapes and absence of NaNs.  (Deliverable f.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ENCODER_ARCHS, get_smoke, runnable_cells
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn)
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    if cfg.family == "encoder":
+        frames = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+        labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        return {"frames": frames, "labels": labels}
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, rng)
+    batch = make_batch(cfg, rng)
+    logits, aux = jax.jit(lambda p, b: forward(cfg, p, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_grad_step_finite(arch, rng):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, rng)
+    batch = make_batch(cfg, rng)
+
+    def loss(p):
+        return loss_fn(cfg, p, batch)[0]
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(val))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+    # gradient actually flows to the embedding/input layer
+    g0 = grads.get("embed", grads.get("frame_proj"))
+    assert float(jnp.abs(g0).max()) > 0
+
+
+@pytest.mark.parametrize("arch",
+                         [a for a in ARCH_IDS if a not in ENCODER_ARCHS])
+def test_decode_step_matches_cache_semantics(arch, rng):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, rng)
+    cache = init_cache(cfg, B, S)
+    tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab)
+    step = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    logits, cache2 = step(params, cache, tok, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache pytree structure preserved, some state actually changed
+    t1 = jax.tree_util.tree_leaves(cache)
+    t2 = jax.tree_util.tree_leaves(cache2)
+    assert len(t1) == len(t2)
+    changed = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(t1, t2))
+    assert changed
+
+
+@pytest.mark.parametrize("arch",
+                         [a for a in ARCH_IDS if a not in ENCODER_ARCHS])
+def test_decode_consistent_with_forward(arch, rng):
+    """Greedy decode logits must match the full-sequence forward logits
+    position by position (cache correctness).
+
+    MoE note: capacity-based dispatch drops different tokens in the
+    forward (16-token pool) vs decode (2-token pool) paths, so the check
+    is only meaningful with drop-free capacity.
+    """
+    from dataclasses import replace
+
+    cfg = get_smoke(arch)
+    if cfg.family == "moe":
+        cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, rng)
+    tokens = jax.random.randint(rng, (B, 8), 0, cfg.vocab)
+    full_logits, _ = forward(cfg, params, {"tokens": tokens})
+
+    cache = init_cache(cfg, B, 8)
+    step = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    for i in range(8):
+        logits_i, cache = step(params, cache, tokens[:, i: i + 1],
+                               jnp.int32(i))
+        np.testing.assert_allclose(
+            np.asarray(logits_i[:, 0], np.float32),
+            np.asarray(full_logits[:, i], np.float32),
+            rtol=2e-2, atol=2e-2,
+            err_msg=f"{arch}: decode diverges from forward at pos {i}")
+
+
+def test_cell_matrix_counts():
+    """40 cells total; 31 runnable; 9 documented skips (DESIGN.md §4)."""
+    from repro.configs import cells
+
+    all_cells = cells()
+    assert len(all_cells) == 40
+    runnable = [c for c in all_cells if c[2] == "run"]
+    assert len(runnable) == 31
+    skips = [c for c in all_cells if c[2] != "run"]
+    assert len(skips) == 9
+
+
+def test_param_counts_in_expected_range():
+    """Full configs land near their advertised sizes."""
+    from repro.configs import get_config
+
+    expect = {
+        "arctic-480b": (400e9, 560e9),
+        "llama3-8b": (7e9, 9.5e9),
+        "granite-20b": (18e9, 24e9),
+        "internlm2-20b": (17e9, 24e9),
+        "qwen1.5-4b": (3e9, 5e9),
+        "chameleon-34b": (30e9, 38e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+        "xlstm-350m": (0.25e9, 0.5e9),
+        # the assigned 48L x 64e config; the HF checkpoint's headline 16B
+        # corresponds to fewer MoE layers — we implement the assignment
+        "moonshot-v1-16b-a3b": (24e9, 30e9),
+        "zamba2-2.7b": (2.0e9, 3.4e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of range"
