@@ -1,7 +1,9 @@
 """Paper Fig. 8: simulated speedup of ILP and heuristic power
 distribution vs equal-share across cluster power bounds, on the Listing-2
 dependency graph (homogeneous Arndale-like cluster), plus the §VI
-uniform-execution-times variant.
+uniform-execution-times variant — now run as one batched sweep through
+:class:`repro.core.SweepEngine`, with the post-refactor ``countdown``
+and ``oracle`` registry policies as extra columns.
 
 Paper's observations to match: large speedups at tight bounds
 (ILP ~2.5x, heuristic ~2.0x on their synthetic Fig.-4 times), decaying to
@@ -14,27 +16,40 @@ import time
 
 import numpy as np
 
-from repro.core import (build_makespan_milp, compare_policies,
-                        homogeneous_cluster, listing2_graph,
-                        listing2_uniform, simulate)
+from repro.core import (SweepEngine, compare_policies, homogeneous_cluster,
+                        listing2_graph, listing2_uniform, scenario_grid)
 
 from .common import csv_line, tight_bound
 
+POLICIES = ("equal-share", "ilp", "heuristic", "countdown", "oracle")
 
-def sweep(g, specs, bounds, use_makespan_milp=False, latency=0.05):
+
+def sweep(g, specs, bounds, use_makespan_milp=False, latency=0.05,
+          name="fig8", policies=POLICIES, engine=None):
+    """Batched (bound x policy) sweep; one row per bound."""
+    engine = engine or SweepEngine()
+    scenarios = scenario_grid({name: g}, specs, bounds, policies,
+                              latency_s=latency,
+                              use_makespan_milp=use_makespan_milp)
+    result = engine.run(scenarios)
+    if result.failures:
+        raise RuntimeError(f"sweep failures: "
+                           f"{[(r.scenario.policy_key, r.error) for r in result.failures]}")
     rows = []
     for P in bounds:
-        res = compare_policies(g, specs, float(P), latency_s=latency,
-                               use_makespan_milp=use_makespan_milp)
-        eq = res["equal-share"]
-        rows.append({
-            "P": float(P),
-            "eq_makespan": eq.makespan,
-            "ilp_speedup": res["ilp"].speedup_vs(eq),
-            "heur_speedup": res["heuristic"].speedup_vs(eq),
-            "heur_avg_power": res["heuristic"].avg_power_w,
-            "eq_avg_power": eq.avg_power_w,
-        })
+        eq = result.result(name, "equal-share", float(P))
+        row = {"P": float(P), "eq_makespan": eq.makespan,
+               "eq_avg_power": eq.avg_power_w}
+        for p in policies:
+            if p == "equal-share":
+                continue
+            r = result.result(name, p, float(P))
+            row[f"{p}_speedup"] = r.speedup_vs(eq)
+        row["ilp_speedup"] = row.get("ilp_speedup", float("nan"))
+        row["heur_speedup"] = row["heuristic_speedup"]
+        row["heur_avg_power"] = result.result(name, "heuristic",
+                                              float(P)).avg_power_w
+        rows.append(row)
     return rows
 
 
@@ -45,6 +60,7 @@ def main(quick: bool = False, uniform: bool = False) -> list:
     hi = 3 * lut.p_max
     n_pts = 5 if quick else 9
     bounds = np.linspace(lo, hi, n_pts)
+    engine = SweepEngine()
 
     out = []
     for name, g in (("fig8", listing2_graph()),
@@ -52,16 +68,17 @@ def main(quick: bool = False, uniform: bool = False) -> list:
         if uniform and name == "fig8":
             continue
         t0 = time.perf_counter()
-        rows = sweep(g, specs, bounds)
+        rows = sweep(g, specs, bounds, name=name, engine=engine)
         us = (time.perf_counter() - t0) * 1e6 / len(rows)
         print(f"\n{name}: cluster power bound sweep "
               f"(paper: ILP 2.5x / heur 2.0x tight, ->1.0 relaxed"
               f"{'; uniform: 2.0x/1.64x' if 'uniform' in name else ''})")
-        print(f"{'P[W]':>8s} {'ILP':>6s} {'heur':>6s} "
-              f"{'heurP[W]':>9s} {'eqP[W]':>7s}")
+        print(f"{'P[W]':>8s} {'ILP':>6s} {'heur':>6s} {'cntdn':>6s} "
+              f"{'oracle':>7s} {'heurP[W]':>9s} {'eqP[W]':>7s}")
         for r in rows:
             print(f"{r['P']:8.2f} {r['ilp_speedup']:6.2f} "
-                  f"{r['heur_speedup']:6.2f} {r['heur_avg_power']:9.2f} "
+                  f"{r['heur_speedup']:6.2f} {r['countdown_speedup']:6.2f} "
+                  f"{r['oracle_speedup']:7.2f} {r['heur_avg_power']:9.2f} "
                   f"{r['eq_avg_power']:7.2f}")
         peak_ilp = max(r["ilp_speedup"] for r in rows)
         peak_heur = max(r["heur_speedup"] for r in rows)

@@ -1,14 +1,18 @@
 """Paper Fig. 9: speedup vs standard deviation of job execution times
 (same Listing-2 structure, times ~ N(10, sigma), sigma = 0..6), at the
 tightest cluster bound.  Paper: speedup increases with variability and
-becomes unstable at high sigma."""
+becomes unstable at high sigma.
+
+All (sigma, seed, policy) cells are dispatched as one batch to
+:class:`repro.core.SweepEngine`; ILP assignments are solved once per
+(graph, bound) by the engine's shared-setup cache."""
 
 from __future__ import annotations
 
 import time
 
-from repro.core import (compare_policies, homogeneous_cluster,
-                        listing2_random)
+from repro.core import (SweepEngine, homogeneous_cluster, listing2_random,
+                        scenario_grid)
 
 from .common import csv_line, tight_bound
 
@@ -19,19 +23,26 @@ def main(quick: bool = False) -> list:
     sds = [0, 2, 4, 6] if quick else [0, 1, 2, 3, 4, 5, 6]
     seeds = [3] if quick else [3, 11, 42]
 
+    graphs = {f"sd{sd}_seed{seed}": listing2_random(float(sd), seed=seed)
+              for sd in sds for seed in seeds}
+    scenarios = scenario_grid(graphs, specs, [P],
+                              ("equal-share", "ilp", "heuristic"))
+
     print("\nfig9: speedup vs stddev of job times "
           "(paper: increases with variability, unstable at high sigma)")
     print(f"{'sd':>4s} {'ILP':>6s} {'heur':>6s}")
     t0 = time.perf_counter()
+    sweep = SweepEngine().run(scenarios)
+    if sweep.failures:
+        raise RuntimeError(f"fig9 failures: "
+                           f"{[(r.scenario.name, r.error) for r in sweep.failures]}")
     results = []
     for sd in sds:
         ilp_s, heur_s = [], []
         for seed in seeds:
-            g = listing2_random(float(sd), seed=seed)
-            res = compare_policies(g, specs, P)
-            eq = res["equal-share"]
-            ilp_s.append(res["ilp"].speedup_vs(eq))
-            heur_s.append(res["heuristic"].speedup_vs(eq))
+            name = f"sd{sd}_seed{seed}"
+            ilp_s.append(sweep.speedup(name, "ilp", P))
+            heur_s.append(sweep.speedup(name, "heuristic", P))
         mean_ilp = sum(ilp_s) / len(ilp_s)
         mean_heur = sum(heur_s) / len(heur_s)
         results.append((sd, mean_ilp, mean_heur))

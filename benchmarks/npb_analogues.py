@@ -1,5 +1,7 @@
 """Paper Figs. 11-13: the NPB benchmark analogues (IS / EP / CG) across
-problem classes A/B/C on a heterogeneous cluster.
+problem classes A/B/C on a heterogeneous cluster, batched through
+:class:`repro.core.SweepEngine` (policies resolved via the registry;
+ILP failures are captured per scenario instead of aborting the class).
 
 Paper's findings to match:
   * EP (CPU-bound): largest heuristic gains (2.25x at class C; ILP 2.78x);
@@ -12,9 +14,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (cg_like, compare_policies, ep_like,
-                        heterogeneous_cluster, is_like, simulate,
-                        solve_paper_ilp)
+from repro.core import (Scenario, SweepEngine, cg_like, ep_like,
+                        heterogeneous_cluster, is_like)
 
 from .common import csv_line, tight_bound
 
@@ -23,12 +24,13 @@ GENS = {"is": is_like, "ep": ep_like, "cg": cg_like}
 
 def main(quick: bool = False) -> list:
     n_nodes = 4
-    specs = heterogeneous_cluster(n_nodes)
+    specs = tuple(heterogeneous_cluster(n_nodes))
     P = tight_bound(specs, frac=0.3)
     classes = ["A", "B"] if quick else ["A", "B", "C"]
     # report->distribute RTT: meaningful vs CG's sub-second jobs (the
     # paper's UDP controller; why CG barely benefits, §VII-C)
     latency = 0.5
+    engine = SweepEngine()
 
     out = []
     for name, gen in GENS.items():
@@ -36,27 +38,32 @@ def main(quick: bool = False) -> list:
         print(f"{'class':>6s} {'jobs':>6s} {'ILP':>6s} {'heur':>6s} "
               f"{'heurP[W]':>9s} {'eqP[W]':>7s}")
         t0 = time.perf_counter()
+        graphs = {klass: gen(n_nodes, klass) for klass in classes}
+        scenarios = []
+        for klass, g in graphs.items():
+            # ILP on every class like the paper, but skip the solver on
+            # the big quick-mode CG instance (it would dominate runtime)
+            policies = ["equal-share", "heuristic"]
+            if not (name == "cg" and klass == "C" and quick):
+                policies.append("ilp")
+            for p in policies:
+                scenarios.append(Scenario(
+                    name=klass, graph=g, specs=specs, bound_w=P, policy=p,
+                    latency_s=latency, ilp_time_limit=90.0,
+                    tags={"bench": name, "jobs": len(g)}))
+        sweep = engine.run(scenarios)
         last = {}
         for klass in classes:
-            g = gen(n_nodes, klass)
-            # ILP on every class like the paper, but cap solver time on
-            # the big CG instances
-            run_ilp = not (name == "cg" and klass == "C" and quick)
-            eq = simulate(g, specs, P, "equal-share", latency_s=latency)
-            heur = simulate(g, specs, P, "heuristic", latency_s=latency)
+            eq = sweep.result(klass, "equal-share", P)
+            heur = sweep.result(klass, "heuristic", P)
             row = {"heur": eq.makespan / heur.makespan,
                    "heurP": heur.avg_power_w, "eqP": eq.avg_power_w}
-            if run_ilp:
-                try:
-                    a = solve_paper_ilp(g, specs, P, time_limit=90.0)
-                    ilp = simulate(g, specs, P, "ilp", assignment=a,
-                                   latency_s=latency)
-                    row["ilp"] = eq.makespan / ilp.makespan
-                except RuntimeError:
-                    row["ilp"] = float("nan")
-            else:
-                row["ilp"] = float("nan")
-            print(f"{klass:>6s} {len(g):6d} {row['ilp']:6.2f} "
+            try:
+                ilp = sweep.result(klass, "ilp", P)
+                row["ilp"] = eq.makespan / ilp.makespan
+            except (KeyError, RuntimeError):
+                row["ilp"] = float("nan")  # skipped or solver timeout
+            print(f"{klass:>6s} {len(graphs[klass]):6d} {row['ilp']:6.2f} "
                   f"{row['heur']:6.2f} {row['heurP']:9.2f} "
                   f"{row['eqP']:7.2f}")
             last = row

@@ -1,7 +1,11 @@
 """Benchmark harness — one module per paper table/figure (deliverable d).
 
-Prints ``name,us_per_call,derived`` CSV at the end.  ``--full`` runs the
-heavier class-C / 9-point variants.
+Bench modules are dispatched through :class:`repro.core.SweepEngine.map`
+(serial by design: each bench prints its own table), which captures
+per-bench failures instead of aborting the suite.  Prints
+``name,us_per_call,derived`` CSV at the end.  ``--full`` runs the heavier
+class-C / 9-point variants; ``--list-policies`` shows the power-policy
+registry the simulator benches draw from.
 """
 
 from __future__ import annotations
@@ -16,8 +20,22 @@ def main(argv=None) -> int:
                     help="full problem classes / sweep resolutions")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--list-policies", action="store_true",
+                    help="list registered power policies and exit")
     args = ap.parse_args(argv)
     quick = not args.full
+
+    if args.list_policies:
+        from repro.policies import available_policies, get_policy
+
+        for name in available_policies():
+            cls = type(get_policy(name))
+            doc = (cls.__doc__ or sys.modules[cls.__module__].__doc__
+                   or "").strip().splitlines()[0]
+            print(f"{name:<14s} {cls.__name__:<24s} {doc}")
+        return 0
+
+    from repro.core import SweepEngine
 
     from . import (depth_tables, fig8_power_sweep, fig9_stddev_sweep,
                    lm_workloads, npb_analogues, roofline_report)
@@ -31,17 +49,24 @@ def main(argv=None) -> int:
         "roofline": roofline_report.main,         # §Roofline table
     }
     only = set(args.only.split(",")) if args.only else None
+    todo = [(name, fn) for name, fn in benches.items()
+            if not only or name in only]
+
+    def run_bench(item):
+        name, fn = item
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        return fn(quick=quick)
+
+    records = SweepEngine(executor="serial").map(
+        run_bench, todo, label=lambda item: item[0])
 
     lines = []
-    for name, fn in benches.items():
-        if only and name not in only:
-            continue
-        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
-        try:
-            lines.extend(fn(quick=quick))
-        except Exception as e:  # noqa: BLE001
-            print(f"BENCH FAILURE {name}: {e!r}")
-            lines.append(f"{name},0.0,FAILED")
+    for rec in records:
+        if rec.ok:
+            lines.extend(rec.value)
+        else:
+            print(f"BENCH FAILURE {rec.label}: {rec.error}")
+            lines.append(f"{rec.label},0.0,FAILED")
 
     print("\n--- CSV (name,us_per_call,derived) ---")
     for line in lines:

@@ -28,8 +28,15 @@ def main():
     print(f"cluster power bound: {bound_w:.2f} W "
           f"(flat-out would need {3 * lut.p_max:.1f} W)")
 
-    # 3. equal-share vs optimal ILP (§IV) vs online heuristic (§V)
-    results = compare_policies(graph, specs, bound_w)
+    # 3. every registered policy on the same workload: the paper's three
+    #    (equal-share, §IV ILP, §V heuristic) plus the post-refactor
+    #    drop-ins (COUNTDOWN-style timeout reclamation, clairvoyant oracle)
+    from repro.policies import available_policies
+
+    policies = [p for p in ("equal-share", "ilp", "heuristic",
+                            "countdown", "oracle")
+                if p in available_policies()]
+    results = compare_policies(graph, specs, bound_w, policies=policies)
     eq = results["equal-share"]
     print(f"\n{'policy':<14s} {'makespan':>10s} {'speedup':>8s} "
           f"{'avg W':>7s}")

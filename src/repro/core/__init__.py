@@ -6,7 +6,9 @@ Layers:
   ilp            — paper ILP + beyond-paper exact-makespan MILP (§IV-B)
   block_detector — report messages + ski-rental debounce (§V-A, §VII-A2)
   heuristic      — Algorithm 1 online controller (§V-B)
-  simulator      — discrete-event cluster simulator (§VI)
+  simulator      — policy-agnostic discrete-event cluster simulator (§VI);
+                   policies live in repro.policies (string-keyed registry)
+  sweep          — batched (graph, bound, policy) scenario engine
   workloads      — Listing-2 example, NPB analogues, pipeline/MoE graphs
   hlo_extract    — job graphs from compiled JAX/XLA steps (§VII-A1 analogue)
   roofline       — three-term roofline from dry-run artifacts
@@ -24,7 +26,9 @@ from .power import (NodeSpec, PowerLUT, PowerState, arndale_like_lut,
                     max_useful_cluster_bound, min_feasible_cluster_bound,
                     nominal_bound, odroid_like_lut, progress_rate,
                     tpu_v5e_lut)
-from .simulator import SimResult, Simulator, compare_policies, simulate
+from .simulator import SimResult, Simulator, simulate
+from .sweep import (MapRecord, Scenario, SweepEngine, SweepRecord,
+                    SweepResult, compare_policies, scenario_grid)
 from .workloads import (LISTING2_TIMES, TraceBuilder, cg_like, ep_like,
                         is_like, listing2_graph, listing2_random,
                         listing2_uniform, moe_step_graph, pipeline_graph)

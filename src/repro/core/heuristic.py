@@ -132,6 +132,18 @@ class PowerDistributionController:
         floor = lut.idle_w + DUTY_FLOOR * (lut.p_min - lut.idle_w)
         return min(max(p, floor), lut.p_max)
 
+    def rebalance(self, cluster_bound_w: Optional[float] = None
+                  ) -> List[DistributeMessage]:
+        """Re-run DISTRIBUTEPOWER from the current online graph, optionally
+        under a new cluster bound (a power-bound arrival, §VI)."""
+        if cluster_bound_w is not None:
+            self.cluster_bound_w = cluster_bound_w
+            self.p_o = cluster_bound_w / self.n
+        epsilon = sum(u.power_gain_w for u in self._v.values()
+                      if u.state == NodeState.BLOCKED)
+        t = self._rank_graph()
+        return self._distribute_power(epsilon, t)
+
     # ------------------------------------------------------------- inspection
     def budget_in_use(self) -> float:
         """Sum of bounds currently granted to running nodes + idle draw of

@@ -1,20 +1,18 @@
 """Discrete-event cluster simulator (paper §VI).
 
-Executes a job dependency graph on a modelled cluster under one of three
-power-distribution policies:
-
-  * ``equal-share`` — every node permanently capped at P/n;
-  * ``ilp``         — per-job caps from a :class:`PowerAssignment` (§IV);
-  * ``heuristic``   — the online controller of Algorithm 1 (§V) with
-                      report/distribute message latency and the §VII-A2
-                      ski-rental debounce, faithfully reproducing the
-                      paper's observed transient power surges.
-
-The simulator is event-driven: job completions, report-manager flushes,
-controller receipts, and power-bound arrivals.  A node's progress through
-its current job integrates work at the rate implied by its current
-frequency, so mid-job cap changes take effect immediately (that is the
+Executes a job dependency graph on a modelled cluster under a pluggable
+:class:`~repro.policies.PowerPolicy` resolved from the string-keyed
+registry in :mod:`repro.policies` (``equal-share``, ``ilp``,
+``heuristic``, ``countdown``, ``oracle``, ...).  The simulator owns the
+physics — progress integration at the rate implied by each node's
+current operating point, energy accounting, the event heap — and feeds
+the policy events (state-transition reports, job starts/completions,
+cluster-bound arrivals, timers); the policy answers with cap-change and
+timer actions.  Mid-job cap changes take effect immediately (that is the
 whole point of power redistribution).
+
+Event kinds: job completions (``finish``), delayed cap grants (``cap``),
+policy timers (``wake``), and cluster power-bound arrivals (``bound``).
 """
 
 from __future__ import annotations
@@ -22,12 +20,11 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import (Dict, Iterable, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
-from .block_detector import (NodeState, ReportManager, blocked_report,
-                             running_report)
+from .block_detector import blocked_report, running_report
 from .graph import Job, JobDependencyGraph, JobId
-from .heuristic import PowerDistributionController
 from .ilp import PowerAssignment
 from .power import NodeSpec, OperatingPoint, op_rate, operating_point
 
@@ -68,7 +65,6 @@ class _NodeRT:
     remaining: float = 0.0
     last_update: float = 0.0
     version: int = 0
-    rm: Optional[ReportManager] = None
 
     @property
     def current(self) -> Optional[Job]:
@@ -76,10 +72,28 @@ class _NodeRT:
 
 
 class Simulator:
+    """Policy-agnostic discrete-event simulator.
+
+    ``policy`` is a registry key or a pre-built ``PowerPolicy`` instance.
+    ``assignment`` is forwarded to the ``ilp`` policies for backwards
+    compatibility with the pre-refactor call signature.
+
+    ``trace_every`` bounds :attr:`SimResult.power_trace` growth during
+    long sweeps: ``0.0`` (default) records every accounting point as
+    before, a positive value records at most one sample per that many
+    simulated seconds, and ``None`` disables the trace entirely.
+
+    ``bound_schedule`` is an iterable of ``(time, new_bound_w)`` power
+    bound arrivals; each triggers the policy's ``on_bound_change`` hook.
+    """
+
     def __init__(self, graph: JobDependencyGraph, specs: Sequence[NodeSpec],
-                 cluster_bound_w: float, policy: str = "equal-share",
+                 cluster_bound_w: float,
+                 policy: Union[str, "PowerPolicy"] = "equal-share",
                  assignment: Optional[PowerAssignment] = None,
-                 latency_s: float = 0.05, max_events: int = 5_000_000):
+                 latency_s: float = 0.05, max_events: int = 5_000_000,
+                 trace_every: Optional[float] = 0.0,
+                 bound_schedule: Iterable[Tuple[float, float]] = ()):
         graph.topological_order()
         self.graph = graph
         self.node_ids = graph.nodes
@@ -87,22 +101,15 @@ class Simulator:
             raise ValueError("one NodeSpec per graph node required")
         self.specs = {nid: specs[k] for k, nid in enumerate(self.node_ids)}
         self.bound = cluster_bound_w
-        self.policy = policy
-        self.assignment = assignment
-        if policy == "ilp" and assignment is None:
-            raise ValueError("ilp policy requires an assignment")
         self.latency = latency_s
-        self.rtt = 2.0 * latency_s
         self.max_events = max_events
+        self.policy = self._resolve_policy(policy, assignment)
+        self.policy_name = getattr(self.policy, "name", None) or str(policy)
 
         self.p_o = cluster_bound_w / len(self.node_ids)
         self.completed: Set[JobId] = set()
         self.children = graph.children()
         self.waiters: Dict[JobId, List[int]] = {}
-        self.controller = PowerDistributionController(
-            cluster_bound_w, len(self.node_ids),
-            specs=specs, node_ids=self.node_ids) \
-            if policy == "heuristic" else None
 
         self.nodes: Dict[int, _NodeRT] = {}
         for nid in self.node_ids:
@@ -110,13 +117,12 @@ class Simulator:
                          jobs=graph.node_jobs(nid))
             rt.cap_w = self.p_o
             rt.op = operating_point(rt.spec.lut, rt.cap_w)
-            if policy == "heuristic":
-                rt.rm = ReportManager(node=nid, breakeven_s=self.rtt)
             self.nodes[nid] = rt
 
         self._heap: List[Tuple[float, int, Tuple]] = []
         self._seq = itertools.count()
         self._now = 0.0
+        self._trace_every = trace_every
         self._power_trace: List[Tuple[float, float]] = []
         self._energy = 0.0
         self._peak = 0.0
@@ -125,6 +131,19 @@ class Simulator:
         self._last_power = 0.0
         self.job_starts: Dict[JobId, float] = {}
         self.job_ends: Dict[JobId, float] = {}
+        for t_b, new_bound in bound_schedule:
+            self._push(float(t_b), ("bound", float(new_bound)))
+
+    @staticmethod
+    def _resolve_policy(policy, assignment):
+        from repro.policies import PowerPolicy, get_policy
+
+        if isinstance(policy, PowerPolicy):
+            return policy
+        kwargs = {}
+        if assignment is not None:
+            kwargs["assignment"] = assignment
+        return get_policy(policy, **kwargs)
 
     # ------------------------------------------------------------- plumbing
     def _push(self, t: float, ev: Tuple) -> None:
@@ -146,17 +165,40 @@ class Simulator:
         self._last_power_t = t
         self._last_power = p
         self._peak = max(self._peak, p)
-        if not self._power_trace or self._power_trace[-1][0] != t:
-            self._power_trace.append((t, p))
-        else:
+        if self._trace_every is None:
+            return
+        if self._power_trace and self._power_trace[-1][0] == t:
             self._power_trace[-1] = (t, p)
+        elif (self._trace_every == 0.0 or not self._power_trace
+              or t - self._power_trace[-1][0] >= self._trace_every):
+            self._power_trace.append((t, p))
+
+    # -------------------------------------------------------- policy actions
+    def _apply_actions(self, actions, t: float) -> None:
+        from repro.policies import SetCap, Wake
+
+        for act in actions:
+            if isinstance(act, SetCap):
+                if act.delay_s > 0:
+                    self._push(t + act.delay_s,
+                               ("cap", act.node, act.cap_w))
+                else:
+                    self._apply_cap(self.nodes[act.node], act.cap_w, t)
+            elif isinstance(act, Wake):
+                self._push(act.at, ("wake", act.token))
+            else:
+                raise TypeError(f"unknown policy action {act!r}")
+
+    def _apply_cap(self, rt: _NodeRT, cap: float, t: float) -> None:
+        self._update_progress(rt, t)
+        rt.cap_w = cap
+        new_op = operating_point(rt.spec.lut, cap)
+        if new_op != rt.op:
+            rt.op = new_op
+            self._reschedule(rt, t)
+        self._account_power(t)
 
     # ---------------------------------------------------------- job control
-    def _job_cap(self, rt: _NodeRT, job: Job) -> float:
-        if self.policy == "ilp":
-            return self.assignment.bounds_w[job.job_id]
-        return rt.cap_w
-
     def _rate(self, rt: _NodeRT, job: Job) -> float:
         return op_rate(job, rt.op, rt.spec.lut.f_max, rt.spec.speed)
 
@@ -167,18 +209,13 @@ class Simulator:
         job = rt.current
         assert job is not None
         rt.state = _NState.RUNNING
-        if self.policy == "ilp":
-            rt.cap_w = self._job_cap(rt, job)
-            rt.op = operating_point(rt.spec.lut, rt.cap_w)
         rt.remaining = job.work
         rt.last_update = t
-        rt.version += 1
         self.job_starts[job.job_id] = t
-        if job.work <= 0:
-            self._push(t, ("finish", rt.nid, rt.version))
-        else:
-            dur = rt.remaining / self._rate(rt, job)
-            self._push(t + dur, ("finish", rt.nid, rt.version))
+        # The policy may re-cap the node for this specific job (e.g. the
+        # static ILP assignment); zero-delay caps land before scheduling.
+        self._apply_actions(self.policy.on_job_start(job, t), t)
+        self._reschedule(rt, t)
 
     def _update_progress(self, rt: _NodeRT, t: float) -> None:
         job = rt.current
@@ -198,21 +235,13 @@ class Simulator:
         dur = rt.remaining / rate if rate > 0 else 0.0
         self._push(t + dur, ("finish", rt.nid, rt.version))
 
-    # ----------------------------------------------------- heuristic plumbing
-    def _emit_report(self, rt: _NodeRT, msg, t: float) -> None:
-        ready = rt.rm.offer(msg, t)
-        for m in ready:
-            self._push(t + self.latency, ("ctrl", m))
-        dl = rt.rm.next_deadline()
-        if dl is not None:
-            self._push(dl, ("rm_poll", rt.nid))
-
     def _block_node(self, rt: _NodeRT, t: float, blockers: Set[int],
                     done: bool = False) -> None:
+        p_g = rt.op.power_w - rt.spec.lut.idle_w  # §V-A power gain
         rt.state = _NState.DONE if done else _NState.BLOCKED
-        if self.controller is not None:
-            p_g = rt.op.power_w - rt.spec.lut.idle_w  # §V-A power gain
-            self._emit_report(rt, blocked_report(rt.nid, blockers, p_g, t), t)
+        self._apply_actions(
+            self.policy.on_report(blocked_report(rt.nid, blockers, p_g, t),
+                                  t), t)
 
     def _try_advance(self, rt: _NodeRT, t: float) -> None:
         """Start the node's next job, or block/finish."""
@@ -224,8 +253,9 @@ class Simulator:
         if self._deps_ready(job):
             was_blocked = rt.state == _NState.BLOCKED
             self._start_job(rt, t)
-            if self.controller is not None and was_blocked:
-                self._emit_report(rt, running_report(rt.nid, t), t)
+            if was_blocked:
+                self._apply_actions(
+                    self.policy.on_report(running_report(rt.nid, t), t), t)
         else:
             pending = [d for d in job.deps if d not in self.completed]
             for d in pending:
@@ -236,7 +266,13 @@ class Simulator:
     # -------------------------------------------------------------- run loop
     def run(self) -> SimResult:
         t = 0.0
+        from repro.policies import ClusterView
+
+        view = ClusterView(graph=self.graph, node_ids=tuple(self.node_ids),
+                           specs=dict(self.specs), bound_w=self.bound,
+                           latency_s=self.latency)
         self._account_power(t)
+        self._apply_actions(self.policy.on_start(view), t)
         for rt in self.nodes.values():
             self._try_advance(rt, t)
         self._account_power(t)
@@ -263,6 +299,7 @@ class Simulator:
                 self.completed.add(job.job_id)
                 self.job_ends[job.job_id] = t
                 rt.ptr += 1
+                self._apply_actions(self.policy.on_job_complete(job, t), t)
                 self._try_advance(rt, t)
                 # wake waiters of this job
                 for wnid in self.waiters.pop(job.job_id, []):
@@ -273,29 +310,19 @@ class Simulator:
                 self._account_power(t)
                 if len(self.completed) == len(self.graph):
                     break  # drain: only in-flight messages remain
-            elif kind == "rm_poll":
-                _, nid = ev
-                rt = self.nodes[nid]
-                for m in rt.rm.poll(t):
-                    self._push(t + self.latency, ("ctrl", m))
-                dl = rt.rm.next_deadline()
-                if dl is not None and dl > t:
-                    self._push(dl, ("rm_poll", nid))
-            elif kind == "ctrl":
-                _, msg = ev
-                for gamma in self.controller.process_message(msg):
-                    self._push(t + self.latency,
-                               ("cap", gamma.node, gamma.power_bound_w))
+            elif kind == "wake":
+                _, token = ev
+                self._apply_actions(self.policy.on_wake(token, t), t)
             elif kind == "cap":
                 _, nid, cap = ev
-                rt = self.nodes[nid]
-                self._update_progress(rt, t)
-                rt.cap_w = cap
-                new_op = operating_point(rt.spec.lut, cap)
-                if new_op != rt.op:
-                    rt.op = new_op
-                    self._reschedule(rt, t)
+                self._apply_cap(self.nodes[nid], cap, t)
+            elif kind == "bound":
+                _, new_bound = ev
                 self._account_power(t)
+                self.bound = new_bound
+                self.p_o = new_bound / len(self.node_ids)
+                self._apply_actions(
+                    self.policy.on_bound_change(new_bound, t), t)
             else:  # pragma: no cover
                 raise AssertionError(f"unknown event {kind}")
 
@@ -306,19 +333,17 @@ class Simulator:
         makespan = max(self.job_ends.values(), default=0.0)
         # close the energy integral at makespan
         self._account_power(makespan)
-        ctrl = self.controller
+        stats = self.policy.stats()
         return SimResult(
-            policy=self.policy,
+            policy=self.policy_name,
             makespan=makespan,
             energy_j=self._energy,
             avg_power_w=self._energy / makespan if makespan > 0 else 0.0,
             peak_power_w=self._peak,
             over_budget_time=self._over_budget_time,
-            messages=ctrl.messages_processed if ctrl else 0,
-            distributes=ctrl.distributes_sent if ctrl else 0,
-            suppressed_reports=sum(rt.rm.suppressed
-                                   for rt in self.nodes.values()
-                                   if rt.rm is not None) if ctrl else 0,
+            messages=int(stats.get("messages", 0)),
+            distributes=int(stats.get("distributes", 0)),
+            suppressed_reports=int(stats.get("suppressed", 0)),
             power_trace=self._power_trace,
             job_starts=self.job_starts,
             job_ends=self.job_ends,
@@ -326,29 +351,14 @@ class Simulator:
 
 
 def simulate(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
-             cluster_bound_w: float, policy: str = "equal-share",
+             cluster_bound_w: float,
+             policy: Union[str, "PowerPolicy"] = "equal-share",
              assignment: Optional[PowerAssignment] = None,
-             latency_s: float = 0.05) -> SimResult:
+             latency_s: float = 0.05,
+             trace_every: Optional[float] = 0.0,
+             bound_schedule: Iterable[Tuple[float, float]] = ()) -> SimResult:
     """One-call façade used by benchmarks and tests."""
     return Simulator(graph, specs, cluster_bound_w, policy=policy,
-                     assignment=assignment, latency_s=latency_s).run()
-
-
-def compare_policies(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
-                     cluster_bound_w: float, latency_s: float = 0.05,
-                     ilp_time_limit: float = 60.0,
-                     use_makespan_milp: bool = False) -> Dict[str, SimResult]:
-    """Run equal-share, ILP and heuristic on the same workload (§VI)."""
-    from .ilp import build_makespan_milp, solve_paper_ilp
-
-    results: Dict[str, SimResult] = {}
-    results["equal-share"] = simulate(graph, specs, cluster_bound_w,
-                                      "equal-share", latency_s=latency_s)
-    solver = build_makespan_milp if use_makespan_milp else solve_paper_ilp
-    assignment = solver(graph, specs, cluster_bound_w,
-                        time_limit=ilp_time_limit)
-    results["ilp"] = simulate(graph, specs, cluster_bound_w, "ilp",
-                              assignment=assignment, latency_s=latency_s)
-    results["heuristic"] = simulate(graph, specs, cluster_bound_w,
-                                    "heuristic", latency_s=latency_s)
-    return results
+                     assignment=assignment, latency_s=latency_s,
+                     trace_every=trace_every,
+                     bound_schedule=bound_schedule).run()

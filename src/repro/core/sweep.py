@@ -1,0 +1,352 @@
+"""Batched scenario sweeps over (graph, bound, policy) grids (§VI-§VII).
+
+The paper's evaluation — and every benchmark in this repo — is a sweep:
+run many scenarios through the simulator and tabulate speedups.  The
+pre-refactor benchmarks each hand-rolled that loop; :class:`SweepEngine`
+centralises it with
+
+  * shared setup: ILP assignments are solved once per unique
+    (graph, specs, bound, solver) and reused across scenarios,
+  * parallel execution via ``concurrent.futures`` (thread, process, or
+    serial executors; the simulator is pure Python, so processes give
+    real speedup on big batches while threads keep zero pickling cost),
+  * structured results: a :class:`SweepResult` table with per-scenario
+    :class:`SimResult` rows, failure capture, and speedup lookups,
+  * bounded memory: scenarios default to ``trace_every=None`` so power
+    traces are not retained across thousands of runs.
+
+``SweepEngine.map`` is the same machinery for arbitrary batch work (used
+by ``launch/dryrun.py`` for its compile cells).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as _futures
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
+
+from .graph import JobDependencyGraph
+from .ilp import PowerAssignment
+from .power import NodeSpec
+from .simulator import SimResult, Simulator
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One (graph, bound, policy) cell of a sweep."""
+
+    name: str
+    graph: JobDependencyGraph
+    specs: Tuple[NodeSpec, ...]
+    bound_w: float
+    policy: Union[str, object]            # registry key or PowerPolicy
+    latency_s: float = 0.05
+    policy_kwargs: Mapping[str, object] = field(default_factory=dict)
+    use_makespan_milp: bool = False
+    ilp_time_limit: float = 60.0
+    trace_every: Optional[float] = None   # no trace retention by default
+    bound_schedule: Tuple[Tuple[float, float], ...] = ()
+    tags: Mapping[str, object] = field(default_factory=dict)
+
+    @property
+    def policy_key(self) -> str:
+        return self.policy if isinstance(self.policy, str) \
+            else getattr(self.policy, "name", str(self.policy))
+
+
+@dataclass
+class SweepRecord:
+    scenario: Scenario
+    result: Optional[SimResult]
+    error: Optional[str] = None
+    elapsed_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+@dataclass
+class MapRecord:
+    label: str
+    value: object = None
+    error: Optional[str] = None
+    elapsed_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+class SweepResult:
+    """Structured table over the finished sweep."""
+
+    def __init__(self, records: List[SweepRecord]):
+        self.records = records
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    @property
+    def failures(self) -> List[SweepRecord]:
+        return [r for r in self.records if not r.ok]
+
+    def result(self, name: str, policy: str,
+               bound_w: Optional[float] = None) -> SimResult:
+        """Exact lookup of one scenario's SimResult (raises if absent)."""
+        for r in self.records:
+            s = r.scenario
+            if s.name == name and s.policy_key == policy and \
+                    (bound_w is None or abs(s.bound_w - bound_w) < 1e-9):
+                if r.error is not None:
+                    raise RuntimeError(
+                        f"scenario {name}/{policy}/{bound_w}: {r.error}")
+                return r.result
+        raise KeyError(f"no scenario {name}/{policy}/{bound_w}")
+
+    def speedup(self, name: str, policy: str, bound_w: float,
+                baseline: str = "equal-share") -> float:
+        base = self.result(name, baseline, bound_w)
+        return self.result(name, policy, bound_w).speedup_vs(base)
+
+    def rows(self) -> List[Dict[str, object]]:
+        out = []
+        for r in self.records:
+            s = r.scenario
+            row: Dict[str, object] = {
+                "name": s.name, "policy": s.policy_key,
+                "bound_w": s.bound_w, "latency_s": s.latency_s,
+                "ok": r.ok, "elapsed_s": r.elapsed_s, **dict(s.tags),
+            }
+            if r.ok:
+                row.update(makespan=r.result.makespan,
+                           energy_j=r.result.energy_j,
+                           avg_power_w=r.result.avg_power_w,
+                           peak_power_w=r.result.peak_power_w,
+                           over_budget_time=r.result.over_budget_time)
+            else:
+                row["error"] = r.error
+            out.append(row)
+        return out
+
+    def to_csv(self) -> str:
+        rows = self.rows()
+        cols: List[str] = []
+        for row in rows:
+            for k in row:
+                if k not in cols:
+                    cols.append(k)
+        lines = [",".join(cols)]
+        for row in rows:
+            lines.append(",".join(str(row.get(c, "")) for c in cols))
+        return "\n".join(lines) + "\n"
+
+
+def _run_scenario(scenario: Scenario,
+                  assignment: Optional[PowerAssignment]) -> SimResult:
+    from repro.policies import get_policy
+
+    policy = scenario.policy
+    if isinstance(policy, str):
+        kwargs = dict(scenario.policy_kwargs)
+        if assignment is not None and "assignment" not in kwargs:
+            kwargs["assignment"] = assignment
+        policy = get_policy(policy, **kwargs)
+    else:
+        # A PowerPolicy instance may appear in several scenarios (e.g. via
+        # scenario_grid); policies are stateful, so each run gets its own
+        # copy — both for thread safety and to avoid state leaking from
+        # one scenario into the next.
+        import copy
+
+        policy = copy.deepcopy(policy)
+    return Simulator(scenario.graph, list(scenario.specs), scenario.bound_w,
+                     policy=policy, latency_s=scenario.latency_s,
+                     trace_every=scenario.trace_every,
+                     bound_schedule=scenario.bound_schedule).run()
+
+
+class SweepEngine:
+    """Runs a batch of scenarios with shared setup and a worker pool.
+
+    ``executor`` is ``"thread"`` (default), ``"process"``, or ``"serial"``.
+    Process pools require picklable graphs/specs (true for everything in
+    :mod:`repro.core.workloads`) and string policy keys.
+    """
+
+    _ILP_POLICIES = ("ilp", "ilp-makespan")
+
+    def __init__(self, max_workers: Optional[int] = None,
+                 executor: str = "thread"):
+        if executor not in ("thread", "process", "serial"):
+            raise ValueError(f"unknown executor {executor!r}")
+        self.max_workers = max_workers
+        self.executor = executor
+        # key -> (graph, assignment); see _assignment_for for why the
+        # graph reference is retained
+        self._assign_cache: Dict[
+            tuple, Tuple[JobDependencyGraph, PowerAssignment]] = {}
+        self._assign_lock = threading.Lock()
+
+    # ------------------------------------------------------- shared setup
+    def _assignment_key(self, s: Scenario) -> tuple:
+        return (id(s.graph),
+                tuple((sp.lut.name, sp.speed) for sp in s.specs),
+                round(s.bound_w, 9), s.use_makespan_milp, s.ilp_time_limit)
+
+    def _assignment_for(self, s: Scenario) -> Optional[PowerAssignment]:
+        if not (isinstance(s.policy, str)
+                and s.policy in self._ILP_POLICIES
+                and "assignment" not in s.policy_kwargs):
+            return None
+        key = self._assignment_key(s)
+        with self._assign_lock:
+            cached = self._assign_cache.get(key)
+        # The cache entry pins the graph: the key contains id(graph), so
+        # the graph must stay alive for as long as the entry does or a
+        # recycled id could alias a different workload.
+        if cached is not None:
+            return cached[1]
+        from .ilp import build_makespan_milp, solve_paper_ilp
+
+        solver = (build_makespan_milp
+                  if (s.use_makespan_milp or s.policy == "ilp-makespan")
+                  else solve_paper_ilp)
+        assignment = solver(s.graph, list(s.specs), s.bound_w,
+                            time_limit=s.ilp_time_limit)
+        with self._assign_lock:
+            self._assign_cache[key] = (s.graph, assignment)
+        return assignment
+
+    # --------------------------------------------------------------- run
+    def run(self, scenarios: Sequence[Scenario]) -> SweepResult:
+        scenarios = list(scenarios)
+
+        def one(s: Scenario) -> SweepRecord:
+            t0 = time.perf_counter()
+            try:
+                assignment = self._assignment_for(s)
+                result = _run_scenario(s, assignment)
+                return SweepRecord(s, result,
+                                   elapsed_s=time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001 — captured per scenario
+                return SweepRecord(s, None, error=f"{type(e).__name__}: {e}",
+                                   elapsed_s=time.perf_counter() - t0)
+
+        if self.executor == "serial" or len(scenarios) <= 1:
+            return SweepResult([one(s) for s in scenarios])
+        if self.executor == "process":
+            # Solve ILP assignments up front in-process (shared setup),
+            # then ship (scenario, assignment) pairs to the pool.  A
+            # failed solve is a per-scenario failure, same as in the
+            # serial/thread paths, not a sweep abort.
+            records: List[SweepRecord] = [None] * len(scenarios)
+            pre: List[Tuple[int, Scenario, Optional[PowerAssignment]]] = []
+            for k, s in enumerate(scenarios):
+                try:
+                    pre.append((k, s, self._assignment_for(s)))
+                except Exception as e:  # noqa: BLE001
+                    records[k] = SweepRecord(
+                        s, None, error=f"{type(e).__name__}: {e}")
+            with _futures.ProcessPoolExecutor(
+                    max_workers=self.max_workers) as pool:
+                futs = {pool.submit(_run_scenario, s, a): k
+                        for k, s, a in pre}
+                for fut in _futures.as_completed(futs):
+                    k = futs[fut]
+                    try:
+                        records[k] = SweepRecord(scenarios[k], fut.result())
+                    except Exception as e:  # noqa: BLE001
+                        records[k] = SweepRecord(
+                            scenarios[k], None,
+                            error=f"{type(e).__name__}: {e}")
+            return SweepResult(records)
+        with _futures.ThreadPoolExecutor(max_workers=self.max_workers) \
+                as pool:
+            return SweepResult(list(pool.map(one, scenarios)))
+
+    # --------------------------------------------------------------- map
+    def map(self, fn: Callable[[object], object], items: Iterable[object],
+            label: Callable[[object], str] = str) -> List[MapRecord]:
+        """Generic batched execution with per-item failure capture."""
+        items = list(items)
+
+        def one(item) -> MapRecord:
+            t0 = time.perf_counter()
+            try:
+                return MapRecord(label(item), value=fn(item),
+                                 elapsed_s=time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001 — captured per item
+                return MapRecord(label(item),
+                                 error=f"{type(e).__name__}: {e}",
+                                 elapsed_s=time.perf_counter() - t0)
+
+        if self.executor == "serial" or len(items) <= 1 \
+                or self.max_workers == 1:
+            return [one(i) for i in items]
+        if self.executor == "process":
+            # fn must be picklable; submit everything first, then collect
+            # in submission order so the pool actually runs concurrently.
+            t0 = time.perf_counter()
+            recs = []
+            with _futures.ProcessPoolExecutor(
+                    max_workers=self.max_workers) as pool:
+                futs = [(item, pool.submit(fn, item)) for item in items]
+                for item, fut in futs:
+                    try:
+                        recs.append(MapRecord(
+                            label(item), value=fut.result(),
+                            elapsed_s=time.perf_counter() - t0))
+                    except Exception as e:  # noqa: BLE001
+                        recs.append(MapRecord(
+                            label(item), error=f"{type(e).__name__}: {e}",
+                            elapsed_s=time.perf_counter() - t0))
+            return recs
+        with _futures.ThreadPoolExecutor(max_workers=self.max_workers) \
+                as pool:
+            return list(pool.map(one, items))
+
+
+def scenario_grid(graphs: Mapping[str, JobDependencyGraph],
+                  specs: Sequence[NodeSpec],
+                  bounds: Iterable[float],
+                  policies: Iterable[Union[str, object]],
+                  latency_s: float = 0.05,
+                  **kwargs) -> List[Scenario]:
+    """Cross product of graphs x bounds x policies as a scenario list."""
+    specs_t = tuple(specs)
+    return [Scenario(name=name, graph=g, specs=specs_t, bound_w=float(P),
+                     policy=p, latency_s=latency_s, **kwargs)
+            for name, g in graphs.items()
+            for P in bounds
+            for p in policies]
+
+
+def compare_policies(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
+                     cluster_bound_w: float, latency_s: float = 0.05,
+                     ilp_time_limit: float = 60.0,
+                     use_makespan_milp: bool = False,
+                     policies: Sequence[str] = ("equal-share", "ilp",
+                                                "heuristic"),
+                     ) -> Dict[str, SimResult]:
+    """Run a set of registry policies on the same workload (§VI)."""
+    engine = SweepEngine(executor="serial")
+    scenarios = scenario_grid({"compare": graph}, specs, [cluster_bound_w],
+                              policies, latency_s=latency_s,
+                              use_makespan_milp=use_makespan_milp,
+                              ilp_time_limit=ilp_time_limit,
+                              trace_every=0.0)
+    sweep = engine.run(scenarios)
+    out: Dict[str, SimResult] = {}
+    for record in sweep:
+        if record.error is not None:
+            raise RuntimeError(f"policy {record.scenario.policy_key!r} "
+                               f"failed: {record.error}")
+        out[record.scenario.policy_key] = record.result
+    return out

@@ -159,6 +159,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # cost_analysis() returns a dict on recent jax, a 1-element list of
+    # dicts on older releases
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     colls = parse_collectives(hlo_text)
     # loop-corrected totals: while-loop trip counts multiplied through
@@ -197,7 +201,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "cost": {k: cost.get(k) for k in
                  ("flops", "bytes accessed", "transcendentals",
                   "utilization")
-                 if k in cost} if isinstance(cost, dict) else dict(cost),
+                 if k in cost},
         "collectives_per_device": colls,
         "collectives_per_device_loop_corrected": coll_corrected,
         "n_microbatches": micro_for(arch, shape_name)
@@ -244,19 +248,24 @@ def main(argv=None):
 
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
-    failures = []
-    for arch, shape_name in todo:
-        for mp in meshes:
-            try:
-                run_cell(arch, shape_name, mp, out_dir)
-            except Exception as e:  # noqa: BLE001
-                failures.append((arch, shape_name, mp, repr(e)[:300]))
-                print(f"[dryrun] FAIL {arch} {shape_name} multi={mp}: {e}",
-                      flush=True)
+    # The compile-cell batch goes through the shared sweep engine (serial:
+    # XLA compilation is not reentrant per process) so failures are
+    # captured per cell with timings instead of hand-rolled try/except.
+    from repro.core import SweepEngine
+
+    cells = [(arch, shape_name, mp)
+             for arch, shape_name in todo for mp in meshes]
+    records = SweepEngine(executor="serial").map(
+        lambda c: run_cell(c[0], c[1], c[2], out_dir),
+        cells,
+        label=lambda c: f"{c[0]}__{c[1]}__{'multi' if c[2] else 'single'}")
+    failures = [r for r in records if not r.ok]
+    for rec in failures:
+        print(f"[dryrun] FAIL {rec.label}: {rec.error}", flush=True)
     if failures:
         print(f"\n{len(failures)} FAILURES:")
-        for f in failures:
-            print("  ", f)
+        for rec in failures:
+            print(f"   {rec.label}: {rec.error[:300]}")
         return 1
     print("\nall dry-run cells compiled OK")
     return 0

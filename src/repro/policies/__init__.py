@@ -1,0 +1,43 @@
+"""Pluggable power-distribution policies (refactor of the simulator's
+former hard-wired branches — see ``base.py`` for the hook contract).
+
+Registered keys:
+
+  ``equal-share``  — static P/n caps (paper baseline)
+  ``ilp``          — static per-job caps from the §IV ILP (self-solving
+                     when no pre-solved assignment is supplied)
+  ``ilp-makespan`` — same, from the beyond-paper exact-makespan MILP
+  ``heuristic``    — Algorithm 1 online controller + §VII-A2 debounce
+  ``countdown``    — COUNTDOWN-style per-node timeout slack reclamation
+                     (arXiv 1806.07258 / 1909.12684)
+  ``oracle``       — zero-latency clairvoyant water-filling upper bound
+
+Authoring a new policy: subclass :class:`PowerPolicy` in a new module,
+decorate it with ``@register_policy("your-key")``, and import the module
+here.  Nothing in ``repro.core.simulator`` needs to change.
+"""
+
+from .base import (Action, ClusterView, PowerPolicy,  # noqa: F401
+                   SetCap, Wake)
+from .registry import (available_policies, get_policy,  # noqa: F401
+                       register_policy)
+
+# Importing the implementation modules populates the registry.
+from . import countdown  # noqa: F401,E402
+from . import equal_share  # noqa: F401,E402
+from . import ilp_static  # noqa: F401,E402
+from . import online_heuristic  # noqa: F401,E402
+from . import oracle  # noqa: F401,E402
+
+from .countdown import CountdownPolicy  # noqa: F401,E402
+from .equal_share import EqualSharePolicy  # noqa: F401,E402
+from .ilp_static import IlpMakespanPolicy, IlpStaticPolicy  # noqa: F401,E402
+from .online_heuristic import OnlineHeuristicPolicy  # noqa: F401,E402
+from .oracle import OraclePolicy  # noqa: F401,E402
+
+__all__ = [
+    "Action", "ClusterView", "PowerPolicy", "SetCap", "Wake",
+    "available_policies", "get_policy", "register_policy",
+    "CountdownPolicy", "EqualSharePolicy", "IlpMakespanPolicy",
+    "IlpStaticPolicy", "OnlineHeuristicPolicy", "OraclePolicy",
+]

@@ -1,0 +1,48 @@
+"""String-keyed policy registry.
+
+``register_policy("name")`` decorates a :class:`PowerPolicy` subclass (or
+any zero/keyword-arg factory); ``get_policy("name", **kwargs)`` builds a
+fresh instance.  The simulator, the sweep engine, and the benchmarks
+resolve policies exclusively through this table, so adding a policy means
+writing one module and importing it from :mod:`repro.policies`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from .base import PowerPolicy
+
+_REGISTRY: Dict[str, Callable[..., PowerPolicy]] = {}
+
+
+def register_policy(name: str, *aliases: str):
+    """Class decorator: register a policy factory under ``name`` (+aliases)."""
+
+    def deco(factory: Callable[..., PowerPolicy]):
+        for key in (name, *aliases):
+            if key in _REGISTRY:
+                raise ValueError(f"policy {key!r} already registered")
+            _REGISTRY[key] = factory
+        return factory
+
+    return deco
+
+
+def get_policy(name: str, **kwargs) -> PowerPolicy:
+    """Instantiate a registered policy by key."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; available: {available_policies()}"
+        ) from None
+    policy = factory(**kwargs)
+    if not isinstance(policy, PowerPolicy):
+        raise TypeError(f"factory for {name!r} returned {type(policy)!r}, "
+                        "not a PowerPolicy")
+    return policy
+
+
+def available_policies() -> List[str]:
+    return sorted(_REGISTRY)

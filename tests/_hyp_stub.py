@@ -1,0 +1,40 @@
+"""No-op stand-ins for ``hypothesis`` so the tier-1 suite collects and
+runs when hypothesis is not installed: property-based tests decorated
+with the stub ``given`` are skipped, everything else runs normally.
+Install the real thing via the ``dev`` extra (``pip install -e .[dev]``).
+"""
+
+import pytest
+
+
+class _Anything:
+    """Absorbs any attribute access / call / subscript, returning itself —
+    enough for module-level ``st.composite`` strategy definitions to parse
+    without ever being executed."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+    def __getitem__(self, key):
+        return self
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+st = _Anything()
+strategies = st

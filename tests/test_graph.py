@@ -7,7 +7,10 @@
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based tests skip without hypothesis
+    from _hyp_stub import given, settings, st
 
 from repro.core import (Job, JobDependencyGraph, listing2_graph,
                         listing2_random, listing2_uniform)

@@ -10,7 +10,10 @@ paper's qualitative claims:
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based tests skip without hypothesis
+    from _hyp_stub import given, settings, st
 
 from repro.core import (NodeState, PowerDistributionController, ReportManager,
                         blocked_report, cg_like, compare_policies, ep_like,

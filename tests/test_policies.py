@@ -1,0 +1,303 @@
+"""Tests for the pluggable policy subsystem and the batched sweep engine.
+
+Covers the ISSUE-1 acceptance criteria:
+  * registry round-trip: every registered policy runs a small diamond
+    graph to completion and respects the cluster bound on average;
+  * regression: the refactored equal-share / ilp / heuristic policies
+    produce makespans *identical* to the pre-refactor simulator (golden
+    values captured from the seed at commit c8c2297);
+  * ``get_policy("countdown")`` works;
+  * the SweepEngine runs batched grids with shared ILP setup, captures
+    failures, and bounds power-trace retention via ``trace_every``.
+"""
+
+import pytest
+
+from repro.core import (JobDependencyGraph, Scenario, SweepEngine,
+                        heterogeneous_cluster, homogeneous_cluster,
+                        listing2_graph, listing2_random, ep_like,
+                        scenario_grid, simulate, solve_paper_ilp)
+from repro.policies import (PowerPolicy, available_policies, get_policy,
+                            register_policy)
+
+
+def tight_bound(specs, frac=0.10):
+    return sum(s.lut.idle_w + frac * (s.lut.p_min - s.lut.idle_w)
+               for s in specs)
+
+
+def diamond_graph():
+    """Fork-join diamond on 3 nodes: root -> two parallel arms -> join."""
+    g = JobDependencyGraph()
+    g.add(0, 0, 3.0)
+    g.add(1, 0, 6.0, deps=[(0, 0)])
+    g.add(2, 0, 2.0, deps=[(0, 0)])
+    g.add(0, 1, 2.0, deps=[(0, 0), (1, 0), (2, 0)])
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------- registry
+class TestRegistry:
+    def test_expected_policies_registered(self):
+        names = available_policies()
+        for expected in ("equal-share", "ilp", "heuristic", "countdown",
+                         "oracle"):
+            assert expected in names
+
+    def test_get_policy_countdown(self):
+        """Acceptance: `from repro.policies import get_policy;
+        get_policy("countdown")` works."""
+        policy = get_policy("countdown")
+        assert isinstance(policy, PowerPolicy)
+        assert policy.name == "countdown"
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(KeyError, match="unknown policy"):
+            get_policy("does-not-exist")
+
+    def test_custom_policy_drop_in(self):
+        """A new policy is a decorated class + nothing else."""
+
+        @register_policy("test-noop")
+        class NoopPolicy(PowerPolicy):
+            name = "test-noop"
+
+        try:
+            g = diamond_graph()
+            specs = homogeneous_cluster(3)
+            r = simulate(g, specs, 9.0, "test-noop")
+            assert len(r.job_ends) == len(g)
+            assert r.policy == "test-noop"
+        finally:
+            from repro.policies.registry import _REGISTRY
+
+            _REGISTRY.pop("test-noop", None)
+
+    @pytest.mark.parametrize("name", ["equal-share", "ilp", "heuristic",
+                                      "countdown", "oracle"])
+    def test_round_trip_diamond(self, name):
+        """Every registered policy completes the diamond and stays within
+        the cluster bound on average (transient surges above the bound are
+        a documented heuristic property, so peak is not asserted)."""
+        g = diamond_graph()
+        specs = homogeneous_cluster(3)
+        P = 0.6 * sum(s.lut.p_max for s in specs)
+        r = simulate(g, specs, P, name)
+        assert len(r.job_ends) == len(g)
+        assert r.makespan > 0
+        assert r.avg_power_w <= P + 1e-6
+        assert r.energy_j == pytest.approx(r.avg_power_w * r.makespan,
+                                           rel=1e-6)
+
+
+# -------------------------------------------------------------- regression
+#: Pre-refactor makespans, captured from the seed simulator (hard-wired
+#: policy branches) on listing2_graph + homogeneous_cluster(3).
+GOLDEN = {
+    2.5: {"equal-share": 162.4153043478261, "ilp": 144.1321202506904,
+          "heuristic": 127.67849905804368},
+    6.0: {"equal-share": 38.0, "ilp": 33.733333333333334,
+          "heuristic": 33.508857142857146},
+    12.0: {"equal-share": 25.333333333333332, "ilp": 23.866666666666667,
+           "heuristic": 23.019345238095237},
+}
+
+
+class TestRefactorRegression:
+    @pytest.mark.parametrize("bound", sorted(GOLDEN))
+    def test_golden_makespans(self, bound):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        gold = GOLDEN[bound]
+        eq = simulate(g, specs, bound, "equal-share")
+        assert eq.makespan == pytest.approx(gold["equal-share"], rel=1e-12)
+        a = solve_paper_ilp(g, specs, bound)
+        ilp = simulate(g, specs, bound, "ilp", assignment=a)
+        assert ilp.makespan == pytest.approx(gold["ilp"], rel=1e-12)
+        heu = simulate(g, specs, bound, "heuristic")
+        assert heu.makespan == pytest.approx(gold["heuristic"], rel=1e-12)
+
+    def test_golden_random_graph_heuristic(self):
+        """Event-timing identity on a messier graph (debounce + latency)."""
+        g = listing2_random(3.0, seed=7)
+        specs = homogeneous_cluster(3)
+        eq = simulate(g, specs, 4.0, "equal-share")
+        heu = simulate(g, specs, 4.0, "heuristic")
+        assert eq.makespan == pytest.approx(326.481519167405, rel=1e-12)
+        assert heu.makespan == pytest.approx(205.42430309398696, rel=1e-12)
+
+    def test_ilp_policy_self_solves(self):
+        """`ilp` without a pre-solved assignment solves at on_start and
+        matches the pre-solved path exactly."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        r = simulate(g, specs, 6.0, "ilp")
+        assert r.makespan == pytest.approx(GOLDEN[6.0]["ilp"], rel=1e-12)
+
+
+# ------------------------------------------------------------ new policies
+class TestNewPolicies:
+    def test_oracle_upper_bounds_heuristic(self):
+        """Zero-latency clairvoyant reclamation beats the debounced online
+        controller once message latency matters — and, unlike the
+        heuristic's documented transient surges (§VII), never draws a
+        single joule above the cluster bound."""
+        g = ep_like(4, "A")
+        specs = heterogeneous_cluster(4)
+        oracle = simulate(g, specs, 6.0, "oracle", latency_s=0.5)
+        heu = simulate(g, specs, 6.0, "heuristic", latency_s=0.5)
+        eq = simulate(g, specs, 6.0, "equal-share", latency_s=0.5)
+        assert oracle.makespan <= heu.makespan * 1.001
+        assert oracle.makespan < eq.makespan
+        assert oracle.over_budget_time == 0.0
+        assert heu.over_budget_time >= 0.0  # surging is allowed for heur
+
+    def test_countdown_beats_equal_share_on_ep(self):
+        g = ep_like(4, "A")
+        specs = heterogeneous_cluster(4)
+        P = tight_bound(specs, frac=0.3)
+        cd = simulate(g, specs, P, "countdown")
+        eq = simulate(g, specs, P, "equal-share")
+        assert eq.makespan / cd.makespan > 1.1
+
+    def test_countdown_timeout_filters_short_blocks(self):
+        """A countdown longer than every block means no reclamation ever
+        fires — makespan degenerates to equal-share's."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        eq = simulate(g, specs, 6.0, "equal-share")
+        lazy = simulate(g, specs, 6.0,
+                        get_policy("countdown", timeout_s=1e9))
+        assert lazy.makespan == pytest.approx(eq.makespan, rel=1e-9)
+
+    def test_bound_change_hook(self):
+        """A mid-run power-bound drop slows equal-share down."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        base = simulate(g, specs, 9.0, "equal-share")
+        dropped = simulate(g, specs, 9.0, "equal-share",
+                           bound_schedule=[(base.makespan / 2, 3.0)])
+        assert dropped.makespan > base.makespan * 1.05
+        raised = simulate(g, specs, 3.0, "heuristic",
+                          bound_schedule=[(1.0, 12.0)])
+        tight = simulate(g, specs, 3.0, "heuristic")
+        assert raised.makespan < tight.makespan
+
+
+# ------------------------------------------------------------ sweep engine
+class TestSweepEngine:
+    def test_grid_runs_and_lookup(self):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        bounds = [4.0, 9.0]
+        scenarios = scenario_grid({"l2": g}, specs, bounds,
+                                  ("equal-share", "heuristic"))
+        sweep = SweepEngine(max_workers=2).run(scenarios)
+        assert len(sweep) == 4 and not sweep.failures
+        for P in bounds:
+            assert sweep.speedup("l2", "heuristic", P) >= 0.99
+        rows = sweep.rows()
+        assert {r["policy"] for r in rows} == {"equal-share", "heuristic"}
+        csv = sweep.to_csv()
+        assert csv.splitlines()[0].startswith("name,policy,bound_w")
+        assert len(csv.splitlines()) == 5
+
+    def test_shared_ilp_setup(self):
+        """Two ilp scenarios on the same (graph, specs, bound) solve once."""
+        import repro.core.ilp as ilp_mod
+
+        calls = {"n": 0}
+        real = ilp_mod.solve_paper_ilp
+
+        def counting(*a, **k):
+            calls["n"] += 1
+            return real(*a, **k)
+
+        g = listing2_graph()
+        specs = tuple(homogeneous_cluster(3))
+        scenarios = [Scenario(name="a", graph=g, specs=specs, bound_w=6.0,
+                              policy="ilp", latency_s=l)
+                     for l in (0.05, 0.5)]
+        engine = SweepEngine(executor="serial")
+        ilp_mod.solve_paper_ilp = counting
+        try:
+            sweep = engine.run(scenarios)
+        finally:
+            ilp_mod.solve_paper_ilp = real
+        assert not sweep.failures
+        assert calls["n"] == 1
+
+    def test_failure_captured_not_raised(self):
+        g = listing2_graph()
+        specs = tuple(homogeneous_cluster(3))
+        scenarios = [
+            Scenario(name="ok", graph=g, specs=specs, bound_w=6.0,
+                     policy="equal-share"),
+            Scenario(name="bad", graph=g, specs=specs, bound_w=6.0,
+                     policy="no-such-policy"),
+        ]
+        sweep = SweepEngine().run(scenarios)
+        assert len(sweep.failures) == 1
+        assert sweep.failures[0].scenario.name == "bad"
+        assert "unknown policy" in sweep.failures[0].error
+        assert sweep.result("ok", "equal-share", 6.0).makespan > 0
+
+    def test_policy_instance_not_shared_across_scenarios(self):
+        """An instance in several scenarios is deep-copied per run, so
+        concurrent/sequential runs can't cross-contaminate its state."""
+        from repro.policies import OnlineHeuristicPolicy
+
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        inst = OnlineHeuristicPolicy()
+        sweep = SweepEngine().run(
+            scenario_grid({"l2": g}, specs, [2.5, 6.0], [inst]))
+        assert not sweep.failures
+        for P in (2.5, 6.0):
+            ref = simulate(g, specs, P, "heuristic")
+            assert sweep.result("l2", "heuristic", P).makespan == \
+                pytest.approx(ref.makespan, rel=1e-12)
+        assert inst.controller is None  # the original was never run
+
+    def test_process_executor_captures_ilp_failure(self):
+        """An infeasible ILP solve is a per-scenario failure in the
+        process path too, not a sweep abort."""
+        g = listing2_graph()
+        specs = tuple(homogeneous_cluster(3))
+        scenarios = [
+            Scenario(name="ok", graph=g, specs=specs, bound_w=6.0,
+                     policy="equal-share"),
+            Scenario(name="bad", graph=g, specs=specs, bound_w=0.1,
+                     policy="ilp"),  # infeasible bound
+        ]
+        sweep = SweepEngine(executor="process", max_workers=2).run(scenarios)
+        assert len(sweep.failures) == 1
+        assert sweep.failures[0].scenario.name == "bad"
+        assert sweep.result("ok", "equal-share", 6.0).makespan > 0
+
+    def test_map_captures_errors(self):
+        engine = SweepEngine()
+        recs = engine.map(lambda x: 1 / x, [2, 0, 4], label=str)
+        assert [r.ok for r in recs] == [True, False, True]
+        assert recs[0].value == 0.5 and "ZeroDivision" in recs[1].error
+
+    def test_trace_every_bounds_retention(self):
+        g = ep_like(3, "A")
+        specs = homogeneous_cluster(3)
+        P = tight_bound(specs, frac=0.3)
+        full = simulate(g, specs, P, "heuristic", trace_every=0.0)
+        sampled = simulate(g, specs, P, "heuristic", trace_every=10.0)
+        off = simulate(g, specs, P, "heuristic", trace_every=None)
+        assert len(full.power_trace) > len(sampled.power_trace) > 0
+        assert off.power_trace == []
+        # sampling must not perturb the physics
+        assert sampled.makespan == pytest.approx(full.makespan, rel=1e-12)
+        assert off.energy_j == pytest.approx(full.energy_j, rel=1e-12)
+
+    def test_sweep_scenarios_drop_traces_by_default(self):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        sweep = SweepEngine().run(scenario_grid({"l2": g}, specs, [6.0],
+                                                ("equal-share",)))
+        assert sweep.result("l2", "equal-share", 6.0).power_trace == []

@@ -1,7 +1,10 @@
 """Power model + ILP tests (paper §IV, §V-A)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based tests skip without hypothesis
+    from _hyp_stub import given, settings, st
 
 from repro.core import (Job, NodeSpec, arndale_like_lut, equal_share_assignment,
                         assignment_peak_power, build_makespan_milp,

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based tests skip without hypothesis
+    from _hyp_stub import given, settings, st
 
 from repro.models.ssm import ssm_decode, ssm_forward, ssm_init
 from repro.models.xlstm import (_mlstm_cell_parallel, mlstm_decode,

@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based tests skip without hypothesis
+    from _hyp_stub import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import (DataConfig, global_batch, host_batch,
