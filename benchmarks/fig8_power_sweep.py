@@ -8,6 +8,10 @@ and ``oracle`` registry policies as extra columns.
 Paper's observations to match: large speedups at tight bounds
 (ILP ~2.5x, heuristic ~2.0x on their synthetic Fig.-4 times), decaying to
 1.0x as the bound relaxes; gains persist with uniform times (ring).
+
+``--backend vector`` (via ``benchmarks.run``) routes the sweep through
+the vectorized batch simulator and appends an event-vs-vector timing
+comparison on a >=500-cell grid.
 """
 
 from __future__ import annotations
@@ -17,7 +21,8 @@ import time
 import numpy as np
 
 from repro.core import (SweepEngine, compare_policies, homogeneous_cluster,
-                        listing2_graph, listing2_uniform, scenario_grid)
+                        listing2_graph, listing2_random, listing2_uniform,
+                        scenario_grid)
 
 from .common import csv_line, tight_bound
 
@@ -53,14 +58,51 @@ def sweep(g, specs, bounds, use_makespan_milp=False, latency=0.05,
     return rows
 
 
-def main(quick: bool = False, uniform: bool = False) -> list:
+def backend_timing(specs, lo, hi) -> list:
+    """Event vs vector wall-clock on a >=500-cell fig8-style grid (the
+    acceptance grid, so it is not shrunk in quick mode — both backends
+    finish it in under a second anyway).
+
+    Solver-free policies only, so the comparison times the simulators
+    themselves rather than a shared ILP setup both backends reuse.
+    """
+    graphs = {"l2": listing2_graph(), "l2u": listing2_uniform(10.0)}
+    for seed in (3, 7, 11):
+        graphs[f"l2r{seed}"] = listing2_random(3.0, seed=seed)
+    bounds = np.linspace(lo, hi, 50)
+    scenarios = scenario_grid(graphs, specs, bounds,
+                              ("equal-share", "oracle"))
+    t0 = time.perf_counter()
+    ev = SweepEngine(executor="thread").run(scenarios)
+    t_event = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec = SweepEngine(executor="vector").run(scenarios)
+    t_vector = time.perf_counter() - t0
+    if ev.failures or vec.failures:
+        raise RuntimeError(f"backend timing failures: "
+                           f"{ev.failures + vec.failures}")
+    dmax = max(abs(a.result.makespan - b.result.makespan)
+               for a, b in zip(ev.records, vec.records))
+    speedup = t_event / t_vector
+    print(f"\nfig8 backend timing: {len(scenarios)} cells | "
+          f"event {t_event:.3f}s  vector {t_vector:.3f}s  "
+          f"speedup {speedup:.1f}x  max |dmakespan| {dmax:.2e}")
+    return [csv_line("fig8_backend_vector",
+                     t_vector * 1e6 / len(scenarios),
+                     f"speedup={speedup:.1f}x;cells={len(scenarios)};"
+                     f"maxdiff={dmax:.2e}")]
+
+
+def main(quick: bool = False, uniform: bool = False,
+         backend: str = "event") -> list:
     specs = homogeneous_cluster(3)
     lut = specs[0].lut
     lo = tight_bound(specs)
     hi = 3 * lut.p_max
     n_pts = 5 if quick else 9
     bounds = np.linspace(lo, hi, n_pts)
-    engine = SweepEngine()
+    engine = SweepEngine(executor="vector") if backend == "vector" \
+        else SweepEngine()
 
     out = []
     for name, g in (("fig8", listing2_graph()),
@@ -93,6 +135,8 @@ def main(quick: bool = False, uniform: bool = False) -> list:
     print(f"\nbeyond-paper makespan-MILP at P={lo:.2f}W: {s:.2f}x "
           f"(paper ILP abstraction ignores cross-node waits)")
     out.append(csv_line("fig8_makespan_milp", 0.0, f"speedup={s:.2f}x"))
+    if backend == "vector":
+        out.extend(backend_timing(specs, lo, hi))
     return out
 
 

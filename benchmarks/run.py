@@ -11,6 +11,7 @@ registry the simulator benches draw from.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 
 
@@ -22,6 +23,11 @@ def main(argv=None) -> int:
                     help="comma-separated bench names")
     ap.add_argument("--list-policies", action="store_true",
                     help="list registered power policies and exit")
+    ap.add_argument("--backend", choices=("event", "vector"),
+                    default="event",
+                    help="simulator backend for benches that support it "
+                         "(vector also prints an event-vs-vector timing "
+                         "comparison)")
     args = ap.parse_args(argv)
     quick = not args.full
 
@@ -55,7 +61,10 @@ def main(argv=None) -> int:
     def run_bench(item):
         name, fn = item
         print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
-        return fn(quick=quick)
+        kwargs = {"quick": quick}
+        if "backend" in inspect.signature(fn).parameters:
+            kwargs["backend"] = args.backend
+        return fn(**kwargs)
 
     records = SweepEngine(executor="serial").map(
         run_bench, todo, label=lambda item: item[0])
@@ -71,7 +80,7 @@ def main(argv=None) -> int:
     print("\n--- CSV (name,us_per_call,derived) ---")
     for line in lines:
         print(line)
-    return 0
+    return 0 if all(rec.ok for rec in records) else 1
 
 
 if __name__ == "__main__":

@@ -8,12 +8,15 @@ Layers:
   heuristic      — Algorithm 1 online controller (§V-B)
   simulator      — policy-agnostic discrete-event cluster simulator (§VI);
                    policies live in repro.policies (string-keyed registry)
+  batchsim       — vectorized batch simulator: B scenarios x N nodes as
+                   arrays (SweepEngine's executor="vector" backend)
   sweep          — batched (graph, bound, policy) scenario engine
   workloads      — Listing-2 example, NPB analogues, pipeline/MoE graphs
   hlo_extract    — job graphs from compiled JAX/XLA steps (§VII-A1 analogue)
   roofline       — three-term roofline from dry-run artifacts
 """
 
+from .batchsim import BatchSimulator, simulate_batch
 from .block_detector import (DistributeMessage, NodeState, ReportManager,
                              ReportMessage, blocked_report, running_report)
 from .graph import Job, JobDependencyGraph, JobId

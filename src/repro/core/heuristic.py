@@ -126,11 +126,10 @@ class PowerDistributionController:
     def _clamp(self, node: int, p: float) -> float:
         if not self.clamp_to_lut or node not in self._specs:
             return p
-        from .power import DUTY_FLOOR
+        from .power import cap_floor_w
 
         lut = self._specs[node].lut
-        floor = lut.idle_w + DUTY_FLOOR * (lut.p_min - lut.idle_w)
-        return min(max(p, floor), lut.p_max)
+        return min(max(p, cap_floor_w(lut)), lut.p_max)
 
     def rebalance(self, cluster_bound_w: Optional[float] = None
                   ) -> List[DistributeMessage]:

@@ -34,6 +34,8 @@ import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
+import numpy as np
+
 from .graph import Job
 
 
@@ -210,6 +212,14 @@ def op_rate(job: Job, op: OperatingPoint, f_nom_mhz: float,
     return op.duty * progress_rate(job, op.freq_mhz, f_nom_mhz, speed)
 
 
+def cap_floor_w(lut: PowerLUT) -> float:
+    """Lowest meaningful power grant for a node: the duty-floor operating
+    point's draw.  THE definition — ``ClusterView.clamp`` and the batch
+    backend's :attr:`LUTTable.cap_floor` must agree or the vector
+    waterfill stops mirroring the event oracle."""
+    return lut.idle_w + DUTY_FLOOR * (lut.p_min - lut.idle_w)
+
+
 def duty_states(lut: PowerLUT,
                 qs: Sequence[float] = (DUTY_FLOOR, 0.0625, 0.125, 0.25,
                                        0.5, 0.75)
@@ -220,6 +230,90 @@ def duty_states(lut: PowerLUT,
     return [OperatingPoint(freq_mhz=f0, duty=q,
                            power_w=lut.idle_w + q * span)
             for q in qs]
+
+
+# ------------------------------------------------------- vectorized tables
+@dataclass(frozen=True)
+class LUTTable:
+    """A cluster's LUTs stacked into arrays for batched translation.
+
+    ``state_p``/``state_f`` are ``(n_nodes, max_states)`` with short LUTs
+    padded by ``+inf`` power rows (a pad never fits any cap, so the fitting
+    states of each node are exactly its real prefix).  Everything here is
+    plain gather/compare/where arithmetic, so the same lookup is
+    JAX-jittable by construction (swap ``np`` for ``jnp``).
+    """
+
+    state_p: np.ndarray   # (N, S) full-load power per state, +inf padded
+    state_f: np.ndarray   # (N, S) frequency per state
+    idle_w: np.ndarray    # (N,)
+    p_min: np.ndarray     # (N,) lowest real state's power
+    p_max: np.ndarray     # (N,) highest real state's power
+    f_min: np.ndarray     # (N,)
+    f_nom: np.ndarray     # (N,) nominal (= max) frequency
+    span: np.ndarray      # (N,) p_min - idle_w (duty-state range)
+    speed: np.ndarray     # (N,) NodeSpec.speed
+
+    cap_floor: np.ndarray = None  # (N,) per-node cap_floor_w
+
+    @property
+    def n_nodes(self) -> int:
+        return self.state_p.shape[0]
+
+
+def lut_table(specs: Sequence[NodeSpec]) -> LUTTable:
+    """Stack a cluster's (possibly heterogeneous) LUTs into a LUTTable."""
+    n_states = max(len(s.lut.states) for s in specs)
+    state_p = np.full((len(specs), n_states), np.inf)
+    state_f = np.zeros((len(specs), n_states))
+    for i, spec in enumerate(specs):
+        k = len(spec.lut.states)
+        state_p[i, :k] = [st.power_w for st in spec.lut.states]
+        state_f[i, :k] = [st.freq_mhz for st in spec.lut.states]
+        state_f[i, k:] = spec.lut.states[-1].freq_mhz
+    idle = np.array([s.lut.idle_w for s in specs])
+    p_min = np.array([s.lut.p_min for s in specs])
+    return LUTTable(
+        state_p=state_p, state_f=state_f, idle_w=idle, p_min=p_min,
+        p_max=np.array([s.lut.p_max for s in specs]),
+        f_min=np.array([s.lut.states[0].freq_mhz for s in specs]),
+        f_nom=np.array([s.lut.f_max for s in specs]),
+        span=p_min - idle,
+        speed=np.array([s.speed for s in specs]),
+        cap_floor=np.array([cap_floor_w(s.lut) for s in specs]))
+
+
+def batched_operating_point(table: LUTTable, caps_w: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized :func:`operating_point`: caps ``(B, N)`` -> (freq, duty,
+    power), each ``(B, N)``.  Elementwise-identical to the scalar
+    translator, including the sub-``p_min`` duty states."""
+    fits = table.state_p[None, :, :] <= caps_w[..., None] + 1e-12
+    idx = fits.sum(axis=-1) - 1            # highest fitting state, -1 if none
+    has_state = idx >= 0
+    idx_c = np.maximum(idx, 0)[..., None]
+    shape = caps_w.shape + (table.state_p.shape[1],)
+    freq_fit = np.take_along_axis(
+        np.broadcast_to(table.state_f[None, :, :], shape), idx_c, -1)[..., 0]
+    power_fit = np.take_along_axis(
+        np.broadcast_to(table.state_p[None, :, :], shape), idx_c, -1)[..., 0]
+    q = (caps_w - table.idle_w[None, :]) / table.span[None, :]
+    q = np.clip(q, DUTY_FLOOR, 1.0)
+    freq = np.where(has_state, freq_fit, table.f_min[None, :])
+    duty = np.where(has_state, 1.0, q)
+    power = np.where(has_state, power_fit,
+                     table.idle_w[None, :] + q * table.span[None, :])
+    return freq, duty, power
+
+
+def batched_rates(table: LUTTable, freq: np.ndarray, duty: np.ndarray,
+                  cpu_frac: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`op_rate` for unit-independent progress: work-units
+    per second for a job with ``cpu_frac`` at (freq, duty) — independent of
+    the job's size, exactly ``op_rate(job, op, f_nom, speed) / job.work``
+    times ``job.work``."""
+    slowdown = cpu_frac * (table.f_nom[None, :] / freq) + (1.0 - cpu_frac)
+    return table.speed[None, :] * duty / slowdown
 
 
 # --------------------------------------------------------------------- LUTs

@@ -46,6 +46,10 @@ class SimResult:
     job_ends: Dict[JobId, float] = field(repr=False, default_factory=dict)
 
     def speedup_vs(self, baseline: "SimResult") -> float:
+        """``baseline.makespan / self.makespan``; a zero-makespan result
+        (empty/zero-work workload) is infinitely fast, not a crash."""
+        if self.makespan == 0:
+            return 1.0 if baseline.makespan == 0 else float("inf")
         return baseline.makespan / self.makespan
 
 

@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple, Union)
 
+from .batchsim import BatchSimulator
 from .graph import JobDependencyGraph
 from .ilp import PowerAssignment
 from .power import NodeSpec
@@ -175,19 +176,26 @@ def _run_scenario(scenario: Scenario,
 class SweepEngine:
     """Runs a batch of scenarios with shared setup and a worker pool.
 
-    ``executor`` is ``"thread"`` (default), ``"process"``, or ``"serial"``.
-    Process pools require picklable graphs/specs (true for everything in
-    :mod:`repro.core.workloads`) and string policy keys.
+    ``executor`` is ``"thread"`` (default), ``"process"``, ``"serial"``,
+    or ``"vector"``.  Process pools require picklable graphs/specs (true
+    for everything in :mod:`repro.core.workloads`) and string policy
+    keys.  The vector executor groups same-shape scenarios — same graph,
+    specs, policy key, and latency, differing only in cluster bound —
+    into :class:`~repro.core.batchsim.BatchSimulator` batches and runs
+    everything else (unknown vector policies, bound schedules, custom
+    policy kwargs or instances) through the event simulator on a thread
+    pool; ``vector_dt`` is the batch backend's control tick.
     """
 
     _ILP_POLICIES = ("ilp", "ilp-makespan")
 
     def __init__(self, max_workers: Optional[int] = None,
-                 executor: str = "thread"):
-        if executor not in ("thread", "process", "serial"):
+                 executor: str = "thread", vector_dt: float = 0.05):
+        if executor not in ("thread", "process", "serial", "vector"):
             raise ValueError(f"unknown executor {executor!r}")
         self.max_workers = max_workers
         self.executor = executor
+        self.vector_dt = vector_dt
         # key -> (graph, assignment); see _assignment_for for why the
         # graph reference is retained
         self._assign_cache: Dict[
@@ -195,9 +203,18 @@ class SweepEngine:
         self._assign_lock = threading.Lock()
 
     # ------------------------------------------------------- shared setup
+    @staticmethod
+    def _specs_sig(specs: Sequence[NodeSpec]) -> tuple:
+        """Content signature of a cluster: LUT names can collide across
+        differently parameterized builders (e.g. ``tpu_v5e_lut(4)`` vs
+        ``tpu_v5e_lut(8)``), so hash the actual states too."""
+        return tuple(
+            (sp.lut.name, sp.speed, sp.lut.idle_w,
+             tuple((st.freq_mhz, st.power_w) for st in sp.lut.states))
+            for sp in specs)
+
     def _assignment_key(self, s: Scenario) -> tuple:
-        return (id(s.graph),
-                tuple((sp.lut.name, sp.speed) for sp in s.specs),
+        return (id(s.graph), self._specs_sig(s.specs),
                 round(s.bound_w, 9), s.use_makespan_milp, s.ilp_time_limit)
 
     def _assignment_for(self, s: Scenario) -> Optional[PowerAssignment]:
@@ -225,20 +242,23 @@ class SweepEngine:
         return assignment
 
     # --------------------------------------------------------------- run
+    def _run_one(self, s: Scenario) -> SweepRecord:
+        t0 = time.perf_counter()
+        try:
+            assignment = self._assignment_for(s)
+            result = _run_scenario(s, assignment)
+            return SweepRecord(s, result,
+                               elapsed_s=time.perf_counter() - t0)
+        except Exception as e:  # noqa: BLE001 — captured per scenario
+            return SweepRecord(s, None, error=f"{type(e).__name__}: {e}",
+                               elapsed_s=time.perf_counter() - t0)
+
     def run(self, scenarios: Sequence[Scenario]) -> SweepResult:
         scenarios = list(scenarios)
+        one = self._run_one
 
-        def one(s: Scenario) -> SweepRecord:
-            t0 = time.perf_counter()
-            try:
-                assignment = self._assignment_for(s)
-                result = _run_scenario(s, assignment)
-                return SweepRecord(s, result,
-                                   elapsed_s=time.perf_counter() - t0)
-            except Exception as e:  # noqa: BLE001 — captured per scenario
-                return SweepRecord(s, None, error=f"{type(e).__name__}: {e}",
-                                   elapsed_s=time.perf_counter() - t0)
-
+        if self.executor == "vector":
+            return self._run_vector(scenarios)
         if self.executor == "serial" or len(scenarios) <= 1:
             return SweepResult([one(s) for s in scenarios])
         if self.executor == "process":
@@ -270,6 +290,94 @@ class SweepEngine:
         with _futures.ThreadPoolExecutor(max_workers=self.max_workers) \
                 as pool:
             return SweepResult(list(pool.map(one, scenarios)))
+
+    # ------------------------------------------------------ vector backend
+    @staticmethod
+    def _vector_eligible(s: Scenario) -> bool:
+        from repro.policies.vector import has_vector_policy
+
+        return (isinstance(s.policy, str) and has_vector_policy(s.policy)
+                and not s.bound_schedule and not s.policy_kwargs)
+
+    def _vector_key(self, s: Scenario) -> tuple:
+        return (id(s.graph), self._specs_sig(s.specs),
+                s.policy, round(s.latency_s, 12), s.trace_every)
+
+    def _run_vector(self, scenarios: Sequence[Scenario]) -> SweepResult:
+        from repro.policies.vector import get_vector_policy
+
+        records: List[Optional[SweepRecord]] = [None] * len(scenarios)
+        groups: Dict[tuple, List[int]] = {}
+        leftovers: List[int] = []
+        for k, s in enumerate(scenarios):
+            if self._vector_eligible(s):
+                groups.setdefault(self._vector_key(s), []).append(k)
+            else:
+                leftovers.append(k)
+
+        def solve(k: int):
+            try:
+                return k, self._assignment_for(scenarios[k]), None
+            except Exception as e:  # noqa: BLE001
+                return k, None, f"{type(e).__name__}: {e}"
+
+        for idxs in groups.values():
+            t0 = time.perf_counter()
+            first = scenarios[idxs[0]]
+            # Shared setup first: a failing ILP solve is a per-scenario
+            # failure, not a batch abort.  Solves run on a thread pool —
+            # the solver is a subprocess, so threads give the same real
+            # concurrency the thread executor has always had.
+            if first.policy in self._ILP_POLICIES and len(idxs) > 1:
+                with _futures.ThreadPoolExecutor(
+                        max_workers=self.max_workers) as pool:
+                    solved = list(pool.map(solve, idxs))
+            else:
+                solved = [solve(k) for k in idxs]
+            batch_idx: List[int] = []
+            assignments: List[Optional[PowerAssignment]] = []
+            for k, assignment, err in solved:
+                if err is not None:
+                    records[k] = SweepRecord(scenarios[k], None, error=err)
+                else:
+                    assignments.append(assignment)
+                    batch_idx.append(k)
+            if not batch_idx:
+                continue
+            kwargs = {}
+            if first.policy in self._ILP_POLICIES:
+                kwargs["assignments"] = assignments
+            try:
+                policy = get_vector_policy(first.policy, **kwargs)
+                sim = BatchSimulator(
+                    first.graph, list(first.specs),
+                    [scenarios[k].bound_w for k in batch_idx],
+                    policy=policy, dt=self.vector_dt,
+                    latency_s=first.latency_s,
+                    trace_every=first.trace_every)
+                results = sim.run()
+                per_cell = (time.perf_counter() - t0) / len(batch_idx)
+                for k, result in zip(batch_idx, results):
+                    records[k] = SweepRecord(scenarios[k], result,
+                                             elapsed_s=per_cell)
+            except Exception as e:  # noqa: BLE001
+                err = f"{type(e).__name__}: {e}"
+                per_cell = (time.perf_counter() - t0) / len(batch_idx)
+                for k in batch_idx:
+                    records[k] = SweepRecord(scenarios[k], None, error=err,
+                                             elapsed_s=per_cell)
+
+        if leftovers:
+            left = [scenarios[k] for k in leftovers]
+            if len(left) == 1:
+                done = [self._run_one(left[0])]
+            else:
+                with _futures.ThreadPoolExecutor(
+                        max_workers=self.max_workers) as pool:
+                    done = list(pool.map(self._run_one, left))
+            for k, rec in zip(leftovers, done):
+                records[k] = rec
+        return SweepResult(records)
 
     # --------------------------------------------------------------- map
     def map(self, fn: Callable[[object], object], items: Iterable[object],

@@ -35,9 +35,18 @@ from .ilp_static import IlpMakespanPolicy, IlpStaticPolicy  # noqa: F401,E402
 from .online_heuristic import OnlineHeuristicPolicy  # noqa: F401,E402
 from .oracle import OraclePolicy  # noqa: F401,E402
 
+# Vectorized adapters for the batch backend (separate registry).
+from .vector import (VectorEqualShare, VectorIlpStatic,  # noqa: F401,E402
+                     VectorOnlineHeuristic, VectorOracle, VectorPolicy,
+                     get_vector_policy, has_vector_policy,
+                     register_vector_policy, vector_policies)
+
 __all__ = [
     "Action", "ClusterView", "PowerPolicy", "SetCap", "Wake",
     "available_policies", "get_policy", "register_policy",
     "CountdownPolicy", "EqualSharePolicy", "IlpMakespanPolicy",
     "IlpStaticPolicy", "OnlineHeuristicPolicy", "OraclePolicy",
+    "VectorEqualShare", "VectorIlpStatic", "VectorOnlineHeuristic",
+    "VectorOracle", "VectorPolicy", "get_vector_policy",
+    "has_vector_policy", "register_vector_policy", "vector_policies",
 ]

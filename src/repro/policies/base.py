@@ -41,7 +41,7 @@ from typing import Dict, Hashable, List, Mapping, Tuple, Union
 
 from repro.core.block_detector import ReportMessage
 from repro.core.graph import Job, JobDependencyGraph
-from repro.core.power import DUTY_FLOOR, NodeSpec
+from repro.core.power import NodeSpec, cap_floor_w
 
 
 @dataclass(frozen=True)
@@ -94,8 +94,7 @@ class ClusterView:
         the duty floor would halt the node (the translator clamps anyway).
         """
         lut = self.specs[node].lut
-        floor = lut.idle_w + DUTY_FLOOR * (lut.p_min - lut.idle_w)
-        return min(max(p_w, floor), lut.p_max)
+        return min(max(p_w, cap_floor_w(lut)), lut.p_max)
 
 
 class PowerPolicy:

@@ -1,0 +1,267 @@
+"""Vectorized policy adapters for the batch simulator.
+
+The event-driven :class:`~repro.policies.PowerPolicy` protocol trades
+messages one node at a time; the fixed-timestep batch backend
+(:mod:`repro.core.batchsim`) instead advances *B* scenarios x *N* nodes
+as arrays and asks a :class:`VectorPolicy` for whole cap *matrices*.  A
+vector policy is registered in its own string-keyed table (mirroring the
+event registry) so :class:`~repro.core.sweep.SweepEngine` can route a
+scenario to the vector backend exactly when its policy key has a vector
+implementation; everything else falls back to the event simulator.
+
+``exact`` declares the contract with the differential test suite:
+
+* ``exact=True`` — the vector semantics reproduce the event simulator's
+  answers to floating-point/timestep tolerance (``equal-share``, ``ilp``,
+  ``ilp-makespan``, ``oracle``: their cap decisions depend only on state
+  transitions, which the batch backend resolves at exact event times).
+* ``exact=False`` — a native vectorization whose control plane is
+  quantized to the timestep (``heuristic``: report/distribute latency is
+  rounded to whole ticks and the ski-rental debounce is dropped), so it
+  tracks the event policy's behaviour but not its exact makespans.
+
+Hooks receive the live :class:`~repro.core.batchsim.BatchSimulator` and
+mutate ``sim.cap`` (a ``(B, N)`` watt matrix) in place; the simulator
+re-derives operating points from ``sim.cap`` every segment.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.power import LUTTable
+
+_VECTOR_REGISTRY: Dict[str, Callable[..., "VectorPolicy"]] = {}
+
+
+def register_vector_policy(name: str, *aliases: str):
+    """Class decorator: register a vector-policy factory under ``name``."""
+
+    def deco(factory: Callable[..., "VectorPolicy"]):
+        for key in (name, *aliases):
+            if key in _VECTOR_REGISTRY:
+                raise ValueError(f"vector policy {key!r} already registered")
+            _VECTOR_REGISTRY[key] = factory
+        return factory
+
+    return deco
+
+
+def get_vector_policy(name: str, **kwargs) -> "VectorPolicy":
+    try:
+        factory = _VECTOR_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no vector policy {name!r}; "
+                       f"available: {vector_policies()}") from None
+    policy = factory(**kwargs)
+    if not isinstance(policy, VectorPolicy):
+        raise TypeError(f"factory for {name!r} returned {type(policy)!r}, "
+                        "not a VectorPolicy")
+    return policy
+
+
+def has_vector_policy(name: str) -> bool:
+    return name in _VECTOR_REGISTRY
+
+
+def vector_policies() -> List[str]:
+    return sorted(_VECTOR_REGISTRY)
+
+
+class VectorPolicy:
+    """Base class for batched policies (see module docstring).
+
+    Subclasses must be constructible from keyword arguments only and set
+    ``name``.  ``wants_ticks=True`` asks the simulator for an ``on_tick``
+    call every ``dt`` of simulated time (the only quantized hook — the
+    others fire at exact event times).
+    """
+
+    name: str = "?"
+    exact: bool = True
+    wants_ticks: bool = False
+
+    def setup(self, sim) -> np.ndarray:
+        """Initial ``(B, N)`` caps; default is the nominal share P/n."""
+        return np.repeat(sim.bounds[:, None] / sim.n_nodes, sim.n_nodes,
+                         axis=1)
+
+    def on_job_start(self, sim, rows: np.ndarray, lanes: np.ndarray,
+                     jobs: np.ndarray) -> None:
+        """Jobs ``jobs[i]`` started on ``(rows[i], lanes[i])`` at the rows'
+        current times.  May write ``sim.cap[rows, lanes]``."""
+
+    def on_transition(self, sim, rows: np.ndarray) -> None:
+        """Some node in each of ``rows`` changed state (start / block /
+        complete) at the rows' current times."""
+
+    def on_tick(self, sim, rows: np.ndarray) -> None:
+        """A ``dt`` boundary passed for boolean row mask ``rows``."""
+
+
+@register_vector_policy("equal-share", "equal_share")
+class VectorEqualShare(VectorPolicy):
+    """Static P/n caps — the base-class setup is the whole policy."""
+
+    name = "equal-share"
+
+
+@register_vector_policy("ilp")
+class VectorIlpStatic(VectorPolicy):
+    """Static per-job caps from the paper ILP, applied at job start.
+
+    ``assignments`` is one pre-solved
+    :class:`~repro.core.ilp.PowerAssignment` per batch row (what the
+    sweep engine's shared-setup cache provides); ``None`` entries (or no
+    list at all) are solved at ``setup`` time, once per unique bound.
+    """
+
+    name = "ilp"
+    use_makespan_milp = False
+
+    def __init__(self, assignments: Optional[Sequence] = None,
+                 time_limit: float = 60.0):
+        self.assignments = assignments
+        self.time_limit = time_limit
+        self._caps_job: Optional[np.ndarray] = None   # (B, J)
+
+    def _solve(self, sim, bound_w: float):
+        from repro.core.ilp import build_makespan_milp, solve_paper_ilp
+
+        solver = (build_makespan_milp if self.use_makespan_milp
+                  else solve_paper_ilp)
+        return solver(sim.graph, sim.specs, bound_w,
+                      time_limit=self.time_limit)
+
+    def setup(self, sim) -> np.ndarray:
+        cache: Dict[float, object] = {}
+        caps_job = np.zeros((sim.n_rows, sim.n_jobs_total))
+        for b in range(sim.n_rows):
+            assignment = (self.assignments[b] if self.assignments is not None
+                          else None)
+            if assignment is None:
+                key = round(float(sim.bounds[b]), 9)
+                if key not in cache:
+                    cache[key] = self._solve(sim, float(sim.bounds[b]))
+                assignment = cache[key]
+            for k, jid in enumerate(sim.job_ids):
+                caps_job[b, k] = assignment.bounds_w[jid]
+        self._caps_job = caps_job
+        return super().setup(sim)
+
+    def on_job_start(self, sim, rows, lanes, jobs) -> None:
+        sim.cap[rows, lanes] = self._caps_job[rows, jobs]
+
+
+@register_vector_policy("ilp-makespan")
+class VectorIlpMakespan(VectorIlpStatic):
+    name = "ilp-makespan"
+    use_makespan_milp = True
+
+    def __init__(self, assignments: Optional[Sequence] = None,
+                 time_limit: float = 120.0):
+        super().__init__(assignments=assignments, time_limit=time_limit)
+
+
+def batched_waterfill(running: np.ndarray, budget: np.ndarray,
+                      table: LUTTable) -> np.ndarray:
+    """Vectorized oracle water-fill: split ``budget[b]`` equally over each
+    row's running nodes, clamp saturated nodes at their ``p_max``,
+    re-spread the surplus until absorbed.  Non-running nodes get the
+    cap floor (they draw idle power regardless).  Row-for-row identical
+    to ``OraclePolicy._waterfill`` + ``ClusterView.clamp``."""
+    n_rows, n_nodes = running.shape
+    floor = table.cap_floor
+    caps = np.broadcast_to(floor[None, :], (n_rows, n_nodes)).copy()
+    open_ = running.copy()
+    rem = budget.astype(float).copy()
+    for _ in range(n_nodes):
+        n_open = open_.sum(axis=1)
+        live = n_open > 0
+        if not live.any():
+            break
+        share = np.where(live, rem / np.maximum(n_open, 1), 0.0)
+        sat = open_ & (table.p_max[None, :] <= share[:, None] + 1e-12)
+        finished = live & ~sat.any(axis=1)
+        if finished.any():
+            m = open_ & finished[:, None]
+            share_b = np.broadcast_to(share[:, None], (n_rows, n_nodes))
+            clamped = np.clip(share_b, floor[None, :], table.p_max[None, :])
+            caps = np.where(m, clamped, caps)
+            open_ &= ~finished[:, None]
+        if sat.any():
+            caps = np.where(sat, table.p_max[None, :], caps)
+            rem = rem - (sat * table.p_max[None, :]).sum(axis=1)
+            open_ &= ~sat
+    return caps
+
+
+@register_vector_policy("oracle")
+class VectorOracle(VectorPolicy):
+    """Zero-latency clairvoyant water-filling, batched.
+
+    State transitions in the batch backend happen at exact event times,
+    so re-solving on ``on_transition`` reproduces the event oracle's cap
+    trajectory exactly — this policy is ``exact`` despite being fully
+    dynamic.
+    """
+
+    name = "oracle"
+
+    def on_transition(self, sim, rows) -> None:
+        running = sim.running[rows]
+        idle_draw = ((~running) * sim.table.idle_w[None, :]).sum(axis=1)
+        budget = sim.bounds[rows] - idle_draw
+        sim.cap[rows] = batched_waterfill(running, budget, sim.table)
+
+
+@register_vector_policy("heuristic")
+class VectorOnlineHeuristic(VectorPolicy):
+    """Native vectorization of the online redistribution controller.
+
+    Each tick the controller observes the blocked/running masks and
+    water-fills the cluster bound (minus blocked nodes' idle draw) over
+    the running nodes — the steady state Algorithm 1 converges to — and
+    the resulting cap matrix is *applied* ``2 * latency_s`` later
+    (report + distribute one-way latencies), rounded to whole ticks.
+    A node that unblocks inside that window keeps its boosted cap until
+    the controller catches up, reproducing the paper's documented
+    transient surges above the bound.  The ski-rental debounce is not
+    modelled, so this is ``exact=False``: it tracks the event heuristic's
+    behaviour and speedups, not its exact makespans.
+    """
+
+    name = "heuristic"
+    exact = False
+    wants_ticks = True
+
+    def __init__(self):
+        self._delay_ticks = 1
+        self._buf: Optional[np.ndarray] = None   # (delay+1, B, N) ring
+        self._ticks: Optional[np.ndarray] = None  # (B,) per-row tick count
+
+    def setup(self, sim) -> np.ndarray:
+        self._delay_ticks = max(1, int(round(2.0 * sim.latency_s / sim.dt)))
+        self._buf = np.zeros((self._delay_ticks + 1, sim.n_rows,
+                              sim.n_nodes))
+        self._ticks = np.zeros(sim.n_rows, dtype=np.int64)
+        return super().setup(sim)
+
+    def on_tick(self, sim, rows) -> None:
+        # The delay is counted in each row's OWN ticks (rows tick at the
+        # same absolute times but stop when done), so a scenario's answer
+        # does not depend on which other bounds share its batch.
+        running = sim.running
+        idle_draw = ((~running) * sim.table.idle_w[None, :]).sum(axis=1)
+        target = batched_waterfill(running, sim.bounds - idle_draw,
+                                   sim.table)
+        idx = np.nonzero(rows)[0]
+        depth = self._delay_ticks + 1
+        self._buf[self._ticks[idx] % depth, idx] = target[idx]
+        self._ticks[idx] += 1
+        ripe = idx[self._ticks[idx] > self._delay_ticks]
+        if ripe.size:
+            slot = (self._ticks[ripe] - 1 - self._delay_ticks) % depth
+            sim.cap[ripe] = self._buf[slot, ripe]

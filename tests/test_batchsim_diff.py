@@ -1,0 +1,214 @@
+"""Differential oracle for the vectorized batch backend (ISSUE 2).
+
+The batch simulator is only trustworthy against the discrete-event
+simulator's answers.  For every *exact* registered vector policy
+(``equal-share``, ``ilp``, ``ilp-makespan``, ``oracle`` — cap decisions
+that depend only on state transitions, which the batch backend resolves
+at exact event times) the two backends must agree on makespan within
+``2 * dt`` and on energy within 1% across the Listing-2 family, a
+hand-rolled TraceBuilder graph, and the NPB-analogue generators.  The
+tick-quantized vector ``heuristic`` (``exact=False``) is held to a
+looser envelope.  The SweepEngine ``executor="vector"`` path is checked
+against the thread path on a whole grid, including fallback of
+non-vectorizable policies.
+"""
+
+import pytest
+
+from repro.core import (Scenario, SweepEngine, TraceBuilder, cg_like,
+                        ep_like, heterogeneous_cluster, homogeneous_cluster,
+                        is_like, listing2_graph, listing2_random,
+                        listing2_uniform, scenario_grid, simulate,
+                        simulate_batch)
+from repro.policies import get_vector_policy, vector_policies
+
+DT = 0.05
+MAKESPAN_ATOL = 2 * DT
+ENERGY_RTOL = 0.01
+
+#: Every registered vector policy, deduplicated across aliases (the
+#: canonical ``.name`` is always itself a registry key) and split by its
+#: declared differential contract.
+EXACT = sorted({p.name for p in map(get_vector_policy, vector_policies())
+                if p.exact})
+APPROX = sorted({p.name for p in map(get_vector_policy, vector_policies())
+                 if not p.exact})
+
+
+def ring_trace_graph():
+    """A small TraceBuilder workload: compute, ring send/recv, allreduce."""
+    tb = TraceBuilder(3)
+    for node, w in ((0, 5.0), (1, 9.0), (2, 3.0)):
+        tb.compute(node, w, cpu_frac=0.8)
+    for node in range(3):
+        tb.send(node, (node + 1) % 3)
+    for node in range(3):
+        tb.recv(node, (node - 1) % 3)
+    for node, w in ((0, 4.0), (1, 2.0), (2, 6.0)):
+        tb.compute(node, w)
+    tb.collective("allreduce", [0, 1, 2])
+    return tb.build()
+
+
+#: (id, graph, specs, bounds) — the Listing-2 family is cheap enough for
+#: the self-solving ILP policies; the generated graphs run solver-free
+#: policies only (an ILP per (graph, bound) would dominate the suite).
+LISTING2_CASES = [
+    ("l2", listing2_graph(), homogeneous_cluster(3), (2.5, 6.0, 12.0)),
+    ("l2-uniform", listing2_uniform(10.0), homogeneous_cluster(3),
+     (3.0, 9.0)),
+    ("l2-random", listing2_random(4.0, seed=3), homogeneous_cluster(3),
+     (4.0, 8.0)),
+]
+GENERATED_CASES = [
+    ("ring-trace", ring_trace_graph(), homogeneous_cluster(3), (4.0, 8.0)),
+    ("ep-het4", ep_like(4, "A"), heterogeneous_cluster(4), (6.0, 12.0)),
+    ("cg-homo3", cg_like(3, "A"), homogeneous_cluster(3), (5.0, 9.0)),
+    ("is-het3", is_like(3, "A"), heterogeneous_cluster(3), (6.0, 15.0)),
+]
+_ids = [c[0] for c in LISTING2_CASES + GENERATED_CASES]
+
+
+def assert_backends_agree(graph, specs, bounds, policy):
+    batch = simulate_batch(graph, specs, bounds, policy, dt=DT)
+    for bound, vec in zip(bounds, batch):
+        ev = simulate(graph, specs, bound, policy)
+        assert vec.makespan == pytest.approx(ev.makespan,
+                                             abs=MAKESPAN_ATOL), \
+            f"{policy} @ {bound}W: event {ev.makespan} vs vec {vec.makespan}"
+        assert vec.energy_j == pytest.approx(ev.energy_j, rel=ENERGY_RTOL)
+        assert vec.over_budget_time == pytest.approx(ev.over_budget_time,
+                                                     abs=2 * DT)
+        assert vec.job_ends.keys() == ev.job_ends.keys()
+
+
+class TestExactPolicies:
+    def test_registry_exposes_exact_policies(self):
+        assert "equal-share" in EXACT and "ilp" in EXACT \
+            and "oracle" in EXACT
+        assert APPROX == ["heuristic"]
+
+    @pytest.mark.parametrize("policy", EXACT)
+    @pytest.mark.parametrize(
+        "case", LISTING2_CASES, ids=[c[0] for c in LISTING2_CASES])
+    def test_listing2_family(self, case, policy):
+        _, graph, specs, bounds = case
+        assert_backends_agree(graph, specs, bounds, policy)
+
+    @pytest.mark.parametrize("policy",
+                             [p for p in EXACT if not p.startswith("ilp")])
+    @pytest.mark.parametrize(
+        "case", GENERATED_CASES, ids=[c[0] for c in GENERATED_CASES])
+    def test_generated_graphs(self, case, policy):
+        _, graph, specs, bounds = case
+        assert_backends_agree(graph, specs, bounds, policy)
+
+    def test_exactness_is_tight_not_just_within_tolerance(self):
+        """The wave scheme resolves completions at exact event times, so
+        static-cap policies should agree to float noise, not merely 2dt."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        for bound in (2.5, 12.0):
+            ev = simulate(g, specs, bound, "equal-share")
+            vec = simulate_batch(g, specs, [bound], "equal-share")[0]
+            assert vec.makespan == pytest.approx(ev.makespan, rel=1e-9)
+            assert vec.energy_j == pytest.approx(ev.energy_j, rel=1e-9)
+
+
+class TestApproxHeuristic:
+    @pytest.mark.parametrize("bound", [2.5, 6.0, 12.0])
+    def test_tracks_event_heuristic(self, bound):
+        """Tick-quantized control plane: within 10% of the event
+        heuristic's makespan and never worse than equal-share."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        ev = simulate(g, specs, bound, "heuristic")
+        eq = simulate(g, specs, bound, "equal-share")
+        vec = simulate_batch(g, specs, [bound], "heuristic", dt=DT)[0]
+        assert vec.makespan == pytest.approx(ev.makespan, rel=0.10)
+        assert vec.makespan <= eq.makespan * 1.01
+
+
+class TestSweepVectorExecutor:
+    def grid(self):
+        specs = homogeneous_cluster(3)
+        graphs = {"l2": listing2_graph(),
+                  "l2r": listing2_random(3.0, seed=7)}
+        return scenario_grid(graphs, specs, [4.0, 9.0],
+                             ("equal-share", "ilp", "oracle"))
+
+    def test_matches_thread_executor(self):
+        scenarios = self.grid()
+        ev = SweepEngine(executor="thread").run(scenarios)
+        vec = SweepEngine(executor="vector").run(scenarios)
+        assert not ev.failures and not vec.failures
+        for a, b in zip(ev.records, vec.records):
+            assert b.result.makespan == pytest.approx(a.result.makespan,
+                                                      abs=MAKESPAN_ATOL)
+            assert b.result.energy_j == pytest.approx(a.result.energy_j,
+                                                      rel=ENERGY_RTOL)
+
+    def test_non_vectorizable_policies_fall_back(self):
+        """countdown has no vector implementation and an explicit policy
+        instance bypasses the registry: both run through the event
+        simulator and agree with a plain simulate() call."""
+        from repro.policies import OnlineHeuristicPolicy
+
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        scenarios = scenario_grid(
+            {"l2": g}, specs, [4.0],
+            ("equal-share", "countdown", OnlineHeuristicPolicy()))
+        sweep = SweepEngine(executor="vector").run(scenarios)
+        assert not sweep.failures
+        for policy in ("countdown", "heuristic"):
+            ref = simulate(g, specs, 4.0, policy)
+            assert sweep.result("l2", policy, 4.0).makespan == \
+                pytest.approx(ref.makespan, rel=1e-12)
+
+    def test_bound_schedule_falls_back(self):
+        g = listing2_graph()
+        specs = tuple(homogeneous_cluster(3))
+        s = Scenario(name="sched", graph=g, specs=specs, bound_w=9.0,
+                     policy="equal-share", bound_schedule=((10.0, 3.0),))
+        sweep = SweepEngine(executor="vector").run([s])
+        assert not sweep.failures
+        ref = simulate(g, specs, 9.0, "equal-share",
+                       bound_schedule=[(10.0, 3.0)])
+        assert sweep.result("sched", "equal-share", 9.0).makespan == \
+            pytest.approx(ref.makespan, rel=1e-12)
+
+    def test_batch_failure_is_per_scenario(self):
+        """An infeasible ILP bound fails its own cell, not the batch."""
+        g = listing2_graph()
+        specs = tuple(homogeneous_cluster(3))
+        scenarios = [
+            Scenario(name="ok", graph=g, specs=specs, bound_w=6.0,
+                     policy="ilp"),
+            Scenario(name="bad", graph=g, specs=specs, bound_w=0.1,
+                     policy="ilp"),
+        ]
+        sweep = SweepEngine(executor="vector").run(scenarios)
+        assert len(sweep.failures) == 1
+        assert sweep.failures[0].scenario.name == "bad"
+        assert sweep.result("ok", "ilp", 6.0).makespan > 0
+
+
+class TestBatchSimValidation:
+    def test_rejects_bad_dt(self):
+        with pytest.raises(ValueError, match="dt"):
+            simulate_batch(listing2_graph(), homogeneous_cluster(3), [6.0],
+                           dt=0.0)
+
+    def test_rejects_empty_bounds(self):
+        with pytest.raises(ValueError, match="bounds"):
+            simulate_batch(listing2_graph(), homogeneous_cluster(3), [])
+
+    def test_rejects_spec_mismatch(self):
+        with pytest.raises(ValueError, match="NodeSpec"):
+            simulate_batch(listing2_graph(), homogeneous_cluster(2), [6.0])
+
+    def test_unknown_vector_policy_raises(self):
+        with pytest.raises(KeyError, match="no vector policy"):
+            simulate_batch(listing2_graph(), homogeneous_cluster(3), [6.0],
+                           policy="countdown")

@@ -1,0 +1,73 @@
+"""Golden regression fixtures: data files instead of inline constants.
+
+``tests/golden/listing2.json`` pins every registry policy's Listing-2
+makespan (the equal-share/ilp/heuristic values are the pre-refactor seed
+simulator's, identical to PR-1's inline GOLDEN dict; countdown/oracle
+were pinned when the fixture was introduced).  Future refactors diff
+against the checked-in data; the vectorized batch backend is held to the
+same numbers for its exact policies.
+
+Regenerating after an *intentional* physics change::
+
+    PYTHONPATH=src python -c "
+    import json; from repro.core import simulate, listing2_graph, \
+        homogeneous_cluster
+    g, specs = listing2_graph(), homogeneous_cluster(3)
+    data = json.load(open('tests/golden/listing2.json'))
+    for bound, row in data['makespans'].items():
+        for pol in row:
+            row[pol] = simulate(g, specs, float(bound), pol).makespan
+    json.dump(data, open('tests/golden/listing2.json', 'w'), indent=2)"
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core import (homogeneous_cluster, listing2_graph, simulate,
+                        simulate_batch)
+from repro.policies import get_vector_policy, has_vector_policy
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "listing2.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with GOLDEN_PATH.open() as f:
+        return json.load(f)
+
+
+def _cells(data):
+    return [(float(bound), policy, makespan)
+            for bound, row in data["makespans"].items()
+            for policy, makespan in row.items()]
+
+
+def test_fixture_covers_every_core_policy():
+    with GOLDEN_PATH.open() as f:
+        data = json.load(f)
+    for row in data["makespans"].values():
+        assert set(row) == {"equal-share", "ilp", "heuristic", "countdown",
+                            "oracle"}
+
+
+def test_event_simulator_matches_golden(golden):
+    g = listing2_graph()
+    specs = homogeneous_cluster(3)
+    for bound, policy, expected in _cells(golden):
+        r = simulate(g, specs, bound, policy)
+        assert r.makespan == pytest.approx(expected, rel=1e-9), \
+            f"{policy} @ {bound}W drifted from tests/golden/listing2.json"
+
+
+def test_vector_backend_matches_golden_for_exact_policies(golden):
+    g = listing2_graph()
+    specs = homogeneous_cluster(3)
+    for bound, policy, expected in _cells(golden):
+        if not (has_vector_policy(policy)
+                and get_vector_policy(policy).exact):
+            continue
+        r = simulate_batch(g, specs, [bound], policy)[0]
+        assert r.makespan == pytest.approx(expected, rel=1e-9), \
+            f"vector {policy} @ {bound}W drifted from golden fixture"

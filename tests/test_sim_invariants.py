@@ -1,0 +1,188 @@
+"""Physics invariants of the simulators, asserted against BOTH backends.
+
+Every property here must hold for the discrete-event simulator and the
+vectorized batch backend alike:
+
+* energy is the integral of the (piecewise-constant) power trace;
+* instantaneous cluster power never exceeds the bound for equal-share
+  (each node is statically capped at P/n), and the ILP's *own* guarantee
+  — per-depth-level cap sums within the bound — holds for its
+  assignments (the paper's abstraction admits transient runtime
+  violations across depth levels, audited via over_budget_time);
+* makespan is bounded below by the critical path at full speed;
+* makespan is monotonically non-increasing in the cluster bound;
+* zero-makespan degenerate results divide safely (``speedup_vs`` /
+  ``avg_power_w``).
+
+A hypothesis fuzz layer re-checks the core invariants on randomized
+Listing-2 execution times when hypothesis is installed (the ``_hyp_stub``
+fallback skips it otherwise, same as the rest of the suite).
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based tests skip without hypothesis
+    from _hyp_stub import given, settings, st
+
+from repro.core import (JobDependencyGraph, LISTING2_TIMES, ep_like,
+                        heterogeneous_cluster, homogeneous_cluster,
+                        listing2_graph, min_feasible_cluster_bound,
+                        simulate, simulate_batch, solve_paper_ilp)
+from repro.core.ilp import assignment_peak_power
+
+BACKENDS = ("event", "vector")
+DT = 0.05
+
+
+def run_one(graph, specs, bound, policy, backend, trace=False):
+    trace_every = 0.0 if trace else None
+    if backend == "event":
+        return simulate(graph, specs, bound, policy,
+                        trace_every=trace_every)
+    return simulate_batch(graph, specs, [bound], policy, dt=DT,
+                          trace_every=trace_every)[0]
+
+
+def trace_energy(trace, makespan):
+    """Integral of a piecewise-constant (t, power) trace up to makespan."""
+    total = 0.0
+    for (t0, p0), (t1, _) in zip(trace, trace[1:]):
+        total += p0 * (t1 - t0)
+    if trace:
+        total += trace[-1][1] * (makespan - trace[-1][0])
+    return total
+
+
+def critical_path_lower_bound(graph, specs):
+    """Makespan can never beat every job running flat-out: at any cap a
+    node's rate is at most ``speed`` work-units/s."""
+    node_ids = graph.nodes
+    speed = {nid: specs[k].speed for k, nid in enumerate(node_ids)}
+    return graph.makespan(lambda j: j.work / speed[j.node])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestEnergyTraceIntegral:
+    @pytest.mark.parametrize("policy", ["equal-share", "oracle",
+                                        "heuristic"])
+    def test_energy_equals_trace_integral(self, backend, policy):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        r = run_one(g, specs, 6.0, policy, backend, trace=True)
+        assert len(r.power_trace) > 1
+        assert r.energy_j == pytest.approx(
+            trace_energy(r.power_trace, r.makespan), rel=1e-6)
+        assert r.avg_power_w == pytest.approx(r.energy_j / r.makespan,
+                                              rel=1e-9)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestBoundCompliance:
+    @pytest.mark.parametrize("bound", [2.5, 6.0, 12.0, 20.0])
+    def test_equal_share_peak_within_bound(self, backend, bound):
+        """P/n static caps with a monotone LUT can never sum above P
+        (bounds at/above the duty floor — below it the translator's
+        progress floor intentionally overdraws)."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        r = run_one(g, specs, bound, "equal-share", backend)
+        assert r.peak_power_w <= bound + 1e-6
+        assert r.over_budget_time == 0.0
+
+    def test_oracle_never_draws_above_bound(self, backend):
+        g = ep_like(4, "A")
+        specs = heterogeneous_cluster(4)
+        r = run_one(g, specs, 8.0, "oracle", backend)
+        assert r.over_budget_time == 0.0
+
+    def test_ilp_assignment_respects_depth_levels(self, backend):
+        """The ILP's contract is per-depth-level: the assignment's
+        abstracted peak fits the bound even when the simulated runtime
+        transiently exceeds it across depth levels (paper §VI)."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        bound = 6.0
+        assignment = solve_paper_ilp(g, specs, bound)
+        assert assignment_peak_power(g, assignment, specs) <= bound + 1e-6
+        r = run_one(g, specs, bound, "ilp", backend)
+        assert r.avg_power_w <= bound + 1e-6
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestMakespanBounds:
+    @pytest.mark.parametrize("policy", ["equal-share", "ilp", "oracle",
+                                        "heuristic"])
+    def test_critical_path_lower_bound(self, backend, policy):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        lb = critical_path_lower_bound(g, specs)
+        r = run_one(g, specs, 50.0, policy, backend)   # relaxed bound
+        assert r.makespan >= lb - 1e-9
+
+    def test_critical_path_lower_bound_heterogeneous(self, backend):
+        g = ep_like(4, "A")
+        specs = heterogeneous_cluster(4)
+        lb = critical_path_lower_bound(g, specs)
+        for bound in (6.0, 30.0):
+            r = run_one(g, specs, bound, "oracle", backend)
+            assert r.makespan >= lb - 1e-9
+
+    @pytest.mark.parametrize("policy", ["equal-share", "ilp", "oracle"])
+    def test_makespan_monotone_in_bound(self, backend, policy):
+        """More power can never slow these policies down."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        lo = min_feasible_cluster_bound(specs)
+        bounds = [lo, 1.5 * lo, 2.5 * lo, 4.0 * lo, 6.0 * lo]
+        spans = [run_one(g, specs, b, policy, backend).makespan
+                 for b in bounds]
+        for slower, faster in zip(spans, spans[1:]):
+            assert faster <= slower + 1e-9
+
+
+class TestDegenerateResults:
+    def zero_work_result(self, backend):
+        g = JobDependencyGraph()
+        g.add(0, 0, 0.0)
+        g.add(1, 0, 0.0, deps=[(0, 0)])
+        specs = homogeneous_cluster(2)
+        return run_one(g, specs, 4.0, "equal-share", backend)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_zero_makespan_divides_safely(self, backend):
+        r0 = self.zero_work_result(backend)
+        assert r0.makespan == 0.0
+        assert r0.avg_power_w == 0.0
+        ref = simulate(listing2_graph(), homogeneous_cluster(3), 6.0,
+                       "equal-share")
+        assert r0.speedup_vs(ref) == float("inf")
+        assert ref.speedup_vs(r0) == 0.0
+        assert r0.speedup_vs(r0) == 1.0
+
+
+# ------------------------------------------------------------- fuzz layer
+@st.composite
+def listing2_times(draw):
+    return {jid: draw(st.floats(min_value=0.0, max_value=50.0,
+                                allow_nan=False, allow_infinity=False))
+            for jid in LISTING2_TIMES}
+
+
+@given(times=listing2_times(),
+       bound=st.floats(min_value=3.0, max_value=25.0))
+@settings(max_examples=25, deadline=None)
+def test_fuzzed_invariants_hold_on_both_backends(times, bound):
+    g = listing2_graph(times)
+    specs = homogeneous_cluster(3)
+    lb = critical_path_lower_bound(g, specs)
+    for backend in BACKENDS:
+        r = run_one(g, specs, bound, "equal-share", backend, trace=True)
+        assert r.makespan >= lb - 1e-9
+        assert r.peak_power_w <= bound + 1e-6
+        assert r.energy_j == pytest.approx(
+            trace_energy(r.power_trace, r.makespan), rel=1e-6, abs=1e-9)
+    ev = run_one(g, specs, bound, "equal-share", "event")
+    vec = run_one(g, specs, bound, "equal-share", "vector")
+    assert vec.makespan == pytest.approx(ev.makespan, abs=2 * DT)
