@@ -2,9 +2,27 @@
 
 from __future__ import annotations
 
+import json
 import time
 from contextlib import contextmanager
 from typing import Callable, Dict, List
+
+#: Machine-readable benchmark payloads, keyed by record name.  Benches
+#: deposit structured results here (wall-clocks, cell counts, max
+#: diffs); ``benchmarks.run`` serializes the collection to
+#: ``BENCH_sweep.json`` after the suite so CI can track the perf
+#: trajectory instead of scraping stdout.
+BENCH_RECORDS: Dict[str, dict] = {}
+
+
+def write_bench_json(path: str) -> bool:
+    """Dump :data:`BENCH_RECORDS` to ``path``; False when empty."""
+    if not BENCH_RECORDS:
+        return False
+    with open(path, "w") as fh:
+        json.dump(BENCH_RECORDS, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return True
 
 
 def tight_bound(specs, frac: float = 0.10) -> float:

@@ -24,7 +24,7 @@ from repro.core import (SweepEngine, compare_policies, homogeneous_cluster,
                         listing2_graph, listing2_random, listing2_uniform,
                         scenario_grid)
 
-from .common import csv_line, tight_bound
+from .common import BENCH_RECORDS, csv_line, tight_bound
 
 POLICIES = ("equal-share", "ilp", "heuristic", "countdown", "oracle")
 
@@ -37,6 +37,8 @@ def sweep(g, specs, bounds, use_makespan_milp=False, latency=0.05,
                               latency_s=latency,
                               use_makespan_milp=use_makespan_milp)
     result = engine.run(scenarios)
+    if engine.executor in SweepEngine.BATCHED_EXECUTORS:
+        print(f"{name}: {result.backend_summary()}")
     if result.failures:
         raise RuntimeError(f"sweep failures: "
                            f"{[(r.scenario.policy_key, r.error) for r in result.failures]}")
@@ -58,39 +60,84 @@ def sweep(g, specs, bounds, use_makespan_milp=False, latency=0.05,
     return rows
 
 
-def backend_timing(specs, lo, hi) -> list:
-    """Event vs vector wall-clock on a >=500-cell fig8-style grid (the
-    acceptance grid, so it is not shrunk in quick mode — both backends
-    finish it in under a second anyway).
+def backend_timing(specs, lo, hi, backend: str = "vector") -> list:
+    """Event vs vector (vs jax) wall-clock on a >=500-cell fig8-style
+    grid (the acceptance grid, so it is not shrunk in quick mode — all
+    backends finish it in seconds).
 
     Solver-free policies only, so the comparison times the simulators
-    themselves rather than a shared ILP setup both backends reuse.
+    themselves rather than a shared ILP setup all backends reuse.  The
+    jax line is timed after one warm-up sweep: compilation is a one-off
+    cost amortized across a session, the steady-state throughput is the
+    number that gates the acceptance criterion.  Results also land in
+    :data:`benchmarks.common.BENCH_RECORDS` for ``BENCH_sweep.json``.
     """
     graphs = {"l2": listing2_graph(), "l2u": listing2_uniform(10.0)}
     for seed in (3, 7, 11):
         graphs[f"l2r{seed}"] = listing2_random(3.0, seed=seed)
     bounds = np.linspace(lo, hi, 50)
-    scenarios = scenario_grid(graphs, specs, bounds,
-                              ("equal-share", "oracle"))
-    t0 = time.perf_counter()
-    ev = SweepEngine(executor="thread").run(scenarios)
-    t_event = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    vec = SweepEngine(executor="vector").run(scenarios)
-    t_vector = time.perf_counter() - t0
-    if ev.failures or vec.failures:
-        raise RuntimeError(f"backend timing failures: "
-                           f"{ev.failures + vec.failures}")
-    dmax = max(abs(a.result.makespan - b.result.makespan)
-               for a, b in zip(ev.records, vec.records))
+    policies = ("equal-share", "oracle")
+    scenarios = scenario_grid(graphs, specs, bounds, policies)
+    cells = len(scenarios)
+
+    def timed_run(executor):
+        t0 = time.perf_counter()
+        sweep = SweepEngine(executor=executor).run(scenarios)
+        elapsed = time.perf_counter() - t0
+        if sweep.failures:
+            raise RuntimeError(f"{executor} backend timing failures: "
+                               f"{[(r.scenario.name, r.error) for r in sweep.failures]}")
+        return sweep, elapsed
+
+    ev, t_event = timed_run("thread")
+    vec, t_vector = timed_run("vector")
+
+    def maxdiff(sweep):
+        return max(abs(a.result.makespan - b.result.makespan)
+                   for a, b in zip(ev.records, sweep.records))
+
+    bench = {
+        "grid": {"cells": cells, "graphs": len(graphs),
+                 "bounds": len(bounds), "policies": list(policies)},
+        "event": {"wall_s": t_event, "us_per_cell": t_event * 1e6 / cells},
+        "vector": {"wall_s": t_vector,
+                   "us_per_cell": t_vector * 1e6 / cells,
+                   "max_makespan_diff_vs_event": maxdiff(vec)},
+    }
+    d_vec = bench["vector"]["max_makespan_diff_vs_event"]
     speedup = t_event / t_vector
-    print(f"\nfig8 backend timing: {len(scenarios)} cells | "
+    print(f"\nfig8 backend timing: {cells} cells | "
           f"event {t_event:.3f}s  vector {t_vector:.3f}s  "
-          f"speedup {speedup:.1f}x  max |dmakespan| {dmax:.2e}")
-    return [csv_line("fig8_backend_vector",
-                     t_vector * 1e6 / len(scenarios),
-                     f"speedup={speedup:.1f}x;cells={len(scenarios)};"
-                     f"maxdiff={dmax:.2e}")]
+          f"speedup {speedup:.1f}x  max |dmakespan| {d_vec:.2e}")
+    out = [csv_line("fig8_backend_vector", t_vector * 1e6 / cells,
+                    f"speedup={speedup:.1f}x;cells={cells};"
+                    f"maxdiff={d_vec:.2e}")]
+
+    if backend == "jax":
+        from repro.backends.jax import HAS_JAX
+
+        if not HAS_JAX:
+            print("  jax timing skipped: jax not installed "
+                  "(pip install -e .[jax])")
+            BENCH_RECORDS["fig8_backend_sweep"] = bench
+            return out
+        _, t_warm = timed_run("jax")          # compile + first run
+        jx, t_jax = timed_run("jax")          # steady state
+        print(f"  {jx.backend_summary()}")
+        d_jax = maxdiff(jx)
+        bench["jax"] = {"wall_s": t_jax, "us_per_cell": t_jax * 1e6 / cells,
+                        "warmup_s": t_warm,
+                        "max_makespan_diff_vs_event": d_jax}
+        speedup_j = t_event / t_jax
+        print(f"  jax {t_jax:.3f}s (warm-up {t_warm:.3f}s)  "
+              f"speedup {speedup_j:.1f}x vs event, "
+              f"{t_vector / t_jax:.1f}x vs vector  "
+              f"max |dmakespan| {d_jax:.2e}")
+        out.append(csv_line("fig8_backend_jax", t_jax * 1e6 / cells,
+                            f"speedup={speedup_j:.1f}x;cells={cells};"
+                            f"maxdiff={d_jax:.2e}"))
+    BENCH_RECORDS["fig8_backend_sweep"] = bench
+    return out
 
 
 def main(quick: bool = False, uniform: bool = False,
@@ -101,8 +148,8 @@ def main(quick: bool = False, uniform: bool = False,
     hi = 3 * lut.p_max
     n_pts = 5 if quick else 9
     bounds = np.linspace(lo, hi, n_pts)
-    engine = SweepEngine(executor="vector") if backend == "vector" \
-        else SweepEngine()
+    engine = SweepEngine(executor=backend) \
+        if backend in SweepEngine.BATCHED_EXECUTORS else SweepEngine()
 
     out = []
     for name, g in (("fig8", listing2_graph()),
@@ -135,8 +182,8 @@ def main(quick: bool = False, uniform: bool = False,
     print(f"\nbeyond-paper makespan-MILP at P={lo:.2f}W: {s:.2f}x "
           f"(paper ILP abstraction ignores cross-node waits)")
     out.append(csv_line("fig8_makespan_milp", 0.0, f"speedup={s:.2f}x"))
-    if backend == "vector":
-        out.extend(backend_timing(specs, lo, hi))
+    if backend in SweepEngine.BATCHED_EXECUTORS:
+        out.extend(backend_timing(specs, lo, hi, backend=backend))
     return out
 
 

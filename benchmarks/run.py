@@ -23,11 +23,16 @@ def main(argv=None) -> int:
                     help="comma-separated bench names")
     ap.add_argument("--list-policies", action="store_true",
                     help="list registered power policies and exit")
-    ap.add_argument("--backend", choices=("event", "vector"),
+    ap.add_argument("--backend", choices=("event", "vector", "jax"),
                     default="event",
                     help="simulator backend for benches that support it "
-                         "(vector also prints an event-vs-vector timing "
-                         "comparison)")
+                         "(vector/jax also print an event-vs-vector[-jax] "
+                         "timing comparison; jax needs the [jax] extra "
+                         "and falls back to vector otherwise)")
+    ap.add_argument("--bench-json", default="BENCH_sweep.json",
+                    help="where to write the machine-readable benchmark "
+                         "artifact (written only when a bench deposits "
+                         "records, i.e. with --backend vector/jax)")
     args = ap.parse_args(argv)
     quick = not args.full
 
@@ -80,6 +85,11 @@ def main(argv=None) -> int:
     print("\n--- CSV (name,us_per_call,derived) ---")
     for line in lines:
         print(line)
+
+    from .common import write_bench_json
+
+    if write_bench_json(args.bench_json):
+        print(f"\nwrote {args.bench_json}")
     return 0 if all(rec.ok for rec in records) else 1
 
 

@@ -1,0 +1,53 @@
+"""Compiled JAX execution backend (guarded: importable without jax).
+
+Importing this package never pulls in jax; the engine modules load
+lazily on first attribute access.  Check :data:`HAS_JAX` (or call
+:func:`jax_available`) before touching the engine from code that must
+run in jax-free environments — :class:`~repro.core.sweep.SweepEngine`
+does exactly that and falls back to the vector backend.
+
+Public surface::
+
+    from repro.backends.jax import JaxBatchSimulator, simulate_batch_jax
+    from repro.backends.jax.policy_fns import jax_policies
+"""
+
+from __future__ import annotations
+
+import importlib.util
+
+#: True when the ``jax`` package is installed (cheap spec probe — does
+#: not import jax, so this is safe at module scope).
+HAS_JAX = importlib.util.find_spec("jax") is not None
+
+
+def jax_available() -> bool:
+    return HAS_JAX
+
+
+_LAZY = {
+    "JaxBatchSimulator": "engine",
+    "simulate_batch_jax": "engine",
+    "JaxPolicy": "policy_fns",
+    "get_jax_policy": "policy_fns",
+    "has_jax_policy": "policy_fns",
+    "jax_policies": "policy_fns",
+}
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    if not HAS_JAX:
+        raise ImportError(
+            f"{__name__}.{name} requires jax; install the optional "
+            f"dependency group: pip install -e .[jax]")
+    import importlib
+
+    mod = importlib.import_module(f"{__name__}.{module}")
+    return getattr(mod, name)
+
+
+__all__ = ["HAS_JAX", "jax_available", *_LAZY]

@@ -1,0 +1,379 @@
+"""Compiled wave-advancement engine (``lax.while_loop`` + ``vmap``).
+
+This is :class:`~repro.core.batchsim.BatchSimulator`'s state machine —
+wave time advancement with completions, dependency hand-offs, energy
+accounting and policy caps resolved at exact event times — ported to a
+compiled ``jax.lax.while_loop`` stepper.  The stepper is written for a
+*single* scenario row (``(N,)`` lane state, ``(J+1,)`` job bookkeeping)
+and ``jax.vmap``-ed over the bound axis, which batches the outer wave
+loop (rows that finish early freeze while the rest keep stepping) and
+the inner settle loop for free.
+
+Per wave, the hot path — LUT power->frequency gather, per-node rate
+computation, earliest-event reduction, and (for redistribution policies)
+idle-power reclamation/water-fill — is one call into
+:mod:`repro.kernels.power_step`: the pure-``jnp`` reference by default,
+or the fused Pallas kernel (``use_kernel=True``; interpret-mode on CPU).
+
+Numerics: the engine runs in JAX's default float32.  Job completion is
+decided by *time* comparison (``t_fin <= delta``), never by a residual
+remaining-work epsilon, so float32 cannot livelock a lane; the
+differential suite holds the results to the same ``2*dt`` makespan / 1%
+energy envelopes as the numpy backend.
+
+The jitted stepper is a module-level function keyed only on array
+shapes and static policy config, so same-shape batches — every
+(graph, policy) group of a sweep grid — share one compilation.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, List, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batchsim import GraphArrays, build_graph_arrays
+from repro.core.graph import JobDependencyGraph
+from repro.core.power import NodeSpec
+from repro.core.simulator import OVER_BUDGET_RTOL, SimResult
+from repro.kernels.power_step import (BIG_TIME, StepTables, power_step,
+                                      step_tables)
+
+from .policy_fns import JaxPolicy, _JAX_REGISTRY, get_jax_policy
+
+#: Anything above this is "no event" (see power_step's BIG_TIME).
+_BIG_CUT = BIG_TIME * 0.5
+
+
+class _Ctx(NamedTuple):
+    """Traced per-batch constants (shared across rows, ``in_axes=None``)."""
+
+    tab: StepTables
+    node_seq: jnp.ndarray   # (N, K) int32
+    deps_pad: jnp.ndarray   # (J+1, D) int32
+    work_pad: jnp.ndarray   # (J+1,)
+    rho_pad: jnp.ndarray    # (J+1,)
+    dt: jnp.ndarray         # scalar
+
+
+class _RowState(NamedTuple):
+    """One scenario row's loop carry."""
+
+    ptr: jnp.ndarray        # (N,) int32 current-job pointer
+    running: jnp.ndarray    # (N,) bool
+    remaining: jnp.ndarray  # (N,)
+    completed: jnp.ndarray  # (J+1,) bool, sentinel slot always True
+    row_t: jnp.ndarray      # scalar
+    bound: jnp.ndarray      # scalar (constant)
+    done: jnp.ndarray       # scalar bool
+    stalled: jnp.ndarray    # scalar bool (deadlock flag)
+    energy: jnp.ndarray     # scalar
+    peak: jnp.ndarray       # scalar
+    over_t: jnp.ndarray     # scalar
+    makespan: jnp.ndarray   # scalar
+    start_t: jnp.ndarray    # (J+1,), NaN until started, sentinel junk
+    end_t: jnp.ndarray      # (J+1,), NaN until completed, sentinel junk
+    tick_count: jnp.ndarray  # scalar int32
+    steps: jnp.ndarray      # scalar int32
+
+
+def _cur(ctx: _Ctx, st: _RowState) -> jnp.ndarray:
+    """Each lane's current job slot (sentinel J when exhausted)."""
+    n = ctx.node_seq.shape[0]
+    return ctx.node_seq[jnp.arange(n), st.ptr]
+
+
+def _ready_mask(ctx: _Ctx, st: _RowState) -> jnp.ndarray:
+    j = ctx.work_pad.shape[0] - 1
+    cur = _cur(ctx, st)
+    deps_ok = st.completed[ctx.deps_pad[cur]].all(axis=-1)
+    return (~st.running) & (cur < j) & deps_ok & ~st.done
+
+
+def _instant_mask(st: _RowState) -> jnp.ndarray:
+    return st.running & (st.remaining <= 0.0)
+
+
+def _start(ctx: _Ctx, st: _RowState, mask: jnp.ndarray) -> _RowState:
+    j = ctx.work_pad.shape[0] - 1
+    cur = _cur(ctx, st)
+    tgt = jnp.where(mask, cur, j)       # masked-off lanes hit the junk slot
+    return st._replace(
+        running=st.running | mask,
+        remaining=jnp.where(mask, ctx.work_pad[cur], st.remaining),
+        start_t=st.start_t.at[tgt].set(st.row_t))
+
+
+def _complete(ctx: _Ctx, st: _RowState, mask: jnp.ndarray) -> _RowState:
+    j = ctx.work_pad.shape[0] - 1
+    cur = _cur(ctx, st)
+    tgt = jnp.where(mask, cur, j)
+    completed = st.completed.at[tgt].set(True)   # sentinel stays True
+    all_done = completed[:j].all()
+    newly = ~st.done & all_done
+    return st._replace(
+        completed=completed,
+        end_t=st.end_t.at[tgt].set(st.row_t),
+        ptr=st.ptr + mask.astype(st.ptr.dtype),
+        running=st.running & ~mask,
+        makespan=jnp.where(newly, st.row_t, st.makespan),
+        done=st.done | all_done)
+
+
+def _settle(ctx: _Ctx, st: _RowState) -> _RowState:
+    """Fixed point of everything that happens at the row's instant:
+    start ready jobs, complete zero-work jobs, repeat until stable
+    (mirrors ``BatchSimulator._settle``; policy caps are re-derived at
+    the top of the next wave instead of via hooks)."""
+
+    def cond(s):
+        return _ready_mask(ctx, s).any() | _instant_mask(s).any()
+
+    def body(s):
+        s = _start(ctx, s, _ready_mask(ctx, s))
+        return _complete(ctx, s, _instant_mask(s))
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+def _row_loop(ctx: _Ctx, bound, pol_state, *, policy_name: str,
+              wants_ticks: bool, redistribute: bool, max_steps: int,
+              impl: str, interpret: bool):
+    cls = _JAX_REGISTRY[policy_name]
+    n = ctx.node_seq.shape[0]
+    jp1 = ctx.work_pad.shape[0]
+    ftype = ctx.work_pad.dtype
+    zero = jnp.zeros((), ftype)
+    st0 = _RowState(
+        ptr=jnp.zeros(n, jnp.int32), running=jnp.zeros(n, bool),
+        remaining=jnp.zeros(n, ftype),
+        completed=jnp.zeros(jp1, bool).at[jp1 - 1].set(True),
+        row_t=zero, bound=jnp.asarray(bound, ftype),
+        done=jnp.zeros((), bool), stalled=jnp.zeros((), bool),
+        energy=zero, peak=zero, over_t=zero, makespan=zero,
+        start_t=jnp.full(jp1, jnp.nan, ftype),
+        end_t=jnp.full(jp1, jnp.nan, ftype),
+        tick_count=jnp.zeros((), jnp.int32), steps=jnp.zeros((), jnp.int32))
+    st0 = _settle(ctx, st0)
+
+    def cond(carry):
+        st, _ = carry
+        return ~st.done & ~st.stalled & (st.steps < max_steps)
+
+    def body(carry):
+        st, pol = carry
+        caps = cls.caps_fn(ctx, st, pol)
+        rate2, _, t_fin2, _, p_cl2, t_comp2 = power_step(
+            ctx.tab, caps[None, :].astype(ftype),
+            st.running[None, :].astype(ftype), st.remaining[None, :],
+            ctx.rho_pad[_cur(ctx, st)][None, :],
+            jnp.reshape(st.bound, (1, 1)), redistribute=redistribute,
+            impl=impl, interpret=interpret)
+        rate, t_fin = rate2[0], t_fin2[0]
+        p_cluster, t_comp = p_cl2[0, 0], t_comp2[0, 0]
+
+        if wants_ticks:
+            next_tick = (st.tick_count + 1).astype(ftype) * ctx.dt
+            t_tick = next_tick - st.row_t
+        else:
+            next_tick = jnp.asarray(BIG_TIME, ftype)
+            t_tick = next_tick
+        delta = jnp.minimum(t_comp, t_tick)
+        # Deadlock is judged on t_comp, not delta: starts depend only on
+        # dependency completions, so a row with no running lane can
+        # never recover — even under a tick policy whose t_tick stays
+        # finite forever.
+        stalled_now = t_comp >= _BIG_CUT
+        delta = jnp.where(stalled_now, 0.0, delta)
+        over = p_cluster > st.bound * (1 + OVER_BUDGET_RTOL) + 1e-9
+        finishing = st.running & (t_fin <= delta * (1 + 1e-6) + 1e-9)
+        row_t = st.row_t + delta
+        due = (t_tick <= t_comp) & ~stalled_now if wants_ticks \
+            else jnp.zeros((), bool)
+        row_t = jnp.where(due, next_tick, row_t)   # kill the float residue
+        st = st._replace(
+            remaining=jnp.where(finishing, 0.0,
+                                st.remaining - rate * delta),
+            row_t=row_t,
+            energy=st.energy + p_cluster * delta,
+            peak=jnp.maximum(st.peak, p_cluster),
+            over_t=st.over_t + jnp.where(over, delta, 0.0),
+            stalled=st.stalled | stalled_now,
+            steps=st.steps + 1)
+        st = _complete(ctx, st, finishing)
+        if wants_ticks:
+            pol = cls.tick_fn(ctx, st, pol, due)
+            st = st._replace(
+                tick_count=st.tick_count + due.astype(jnp.int32))
+        st = _settle(ctx, st)
+        return st, pol
+
+    st, _ = jax.lax.while_loop(cond, body, (st0, pol_state))
+    return {
+        "makespan": st.makespan, "energy": st.energy, "peak": st.peak,
+        "over_t": st.over_t, "start_t": st.start_t, "end_t": st.end_t,
+        "completed": st.completed, "done": st.done, "stalled": st.stalled,
+        "steps": st.steps,
+    }
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy_name", "wants_ticks", "redistribute",
+                     "max_steps", "impl", "interpret"))
+def _run_batch(ctx: _Ctx, bounds, pol_state, *, policy_name: str,
+               wants_ticks: bool, redistribute: bool, max_steps: int,
+               impl: str, interpret: bool):
+    row = functools.partial(
+        _row_loop, policy_name=policy_name, wants_ticks=wants_ticks,
+        redistribute=redistribute, max_steps=max_steps, impl=impl,
+        interpret=interpret)
+    return jax.vmap(lambda b, p: row(ctx, b, p))(bounds, pol_state)
+
+
+def _to_device(x):
+    """Normalize dtypes host-side; the jit boundary does the transfer."""
+    a = np.asarray(x)
+    if a.dtype.kind == "f":
+        return a.astype(np.dtype(jnp.result_type(float).name), copy=False)
+    if a.dtype.kind == "i":
+        return a.astype(np.int32, copy=False)
+    return a
+
+
+class JaxBatchSimulator:
+    """Compiled drop-in for :class:`~repro.core.batchsim.BatchSimulator`.
+
+    Same fixed-structure batch contract — one graph, one cluster, B
+    bounds, one policy — with ``policy`` resolved from the jax-policy
+    registry (:mod:`repro.backends.jax.policy_fns`).  ``use_kernel``
+    routes the per-wave hot path through the fused Pallas kernel;
+    ``kernel_interpret`` defaults to interpret-mode everywhere except a
+    real TPU backend.  Power traces are not retained (``trace_every``
+    must be ``None``): sweeps that need traces belong on the numpy
+    backends.
+    """
+
+    def __init__(self, graph: JobDependencyGraph, specs: Sequence[NodeSpec],
+                 bounds: Sequence[float],
+                 policy: Union[str, JaxPolicy] = "equal-share",
+                 dt: float = 0.05, latency_s: float = 0.05,
+                 trace_every: Optional[float] = None,
+                 max_steps: int = 1_000_000, use_kernel: bool = False,
+                 kernel_interpret: Optional[bool] = None,
+                 **policy_kwargs):
+        if dt <= 0:
+            raise ValueError("dt must be positive")
+        if trace_every is not None:
+            raise ValueError("the jax backend retains no power traces "
+                             "(trace_every must be None); use the vector "
+                             "or event backend for traced runs")
+        graph.topological_order()          # validates the DAG
+        if len(specs) != len(graph.nodes):
+            raise ValueError("one NodeSpec per graph node required")
+        self.graph = graph
+        self.specs = list(specs)
+        self.bounds = np.asarray(list(bounds), dtype=float)
+        if self.bounds.ndim != 1 or len(self.bounds) == 0:
+            raise ValueError("bounds must be a non-empty 1-D sequence")
+        self.dt = float(dt)
+        self.latency_s = float(latency_s)
+        self.max_steps = int(max_steps)
+        self.use_kernel = use_kernel
+        if kernel_interpret is None:
+            kernel_interpret = jax.default_backend() != "tpu"
+        self.kernel_interpret = bool(kernel_interpret)
+        if isinstance(policy, JaxPolicy):
+            if policy_kwargs:
+                raise ValueError("policy_kwargs only apply to registry "
+                                 "keys")
+            self.policy = policy
+        else:
+            self.policy = get_jax_policy(policy, **policy_kwargs)
+        self.arrays: GraphArrays = build_graph_arrays(graph, self.specs)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.arrays.n_nodes
+
+    def _ctx(self) -> _Ctx:
+        # numpy leaves throughout: the jitted stepper converts the whole
+        # pytree in one dispatch, instead of ~15 eager device_puts here.
+        a = self.arrays
+        ftype = np.dtype(jnp.result_type(float).name)
+        return _Ctx(tab=step_tables(a.table, ftype),
+                    node_seq=np.asarray(a.node_seq, np.int32),
+                    deps_pad=np.asarray(a.deps_pad, np.int32),
+                    work_pad=np.asarray(a.work_pad, ftype),
+                    rho_pad=np.asarray(a.rho_pad, ftype),
+                    dt=np.asarray(self.dt, ftype))
+
+    def run(self) -> List[SimResult]:
+        self.policy.prepare(self)
+        pol_state = {k: _to_device(v)
+                     for k, v in self.policy.init_state(self).items()}
+        out = _run_batch(
+            self._ctx(), _to_device(self.bounds), pol_state,
+            policy_name=self.policy.name,
+            wants_ticks=self.policy.wants_ticks,
+            redistribute=self.policy.redistribute,
+            max_steps=self.max_steps,
+            impl="pallas" if self.use_kernel else "ref",
+            interpret=self.kernel_interpret)
+        out = {k: np.asarray(v) for k, v in out.items()}
+        self._check_failures(out)
+        return self._results(out)
+
+    def _check_failures(self, out: Dict[str, np.ndarray]) -> None:
+        job_ids = self.arrays.job_ids
+        if out["stalled"].any():
+            bad = int(np.nonzero(out["stalled"])[0][0])
+            missing = [job_ids[k] for k in range(len(job_ids))
+                       if not out["completed"][bad, k]]
+            raise RuntimeError(f"deadlock in batch row {bad}: jobs "
+                               f"never ran: {sorted(missing)[:8]}")
+        hung = ~out["done"] & (out["steps"] >= self.max_steps)
+        if hung.any():
+            raise RuntimeError(f"jax batch simulator exceeded max steps "
+                               f"({self.max_steps}); livelock?")
+
+    def _results(self, out: Dict[str, np.ndarray]) -> List[SimResult]:
+        job_ids = self.arrays.job_ids
+        name = self.policy.name
+        results: List[SimResult] = []
+        for row in range(self.n_rows):
+            makespan = float(out["makespan"][row])
+            starts = {jid: float(out["start_t"][row, k])
+                      for k, jid in enumerate(job_ids)
+                      if not math.isnan(out["start_t"][row, k])}
+            ends = {jid: float(out["end_t"][row, k])
+                    for k, jid in enumerate(job_ids)
+                    if not math.isnan(out["end_t"][row, k])}
+            energy = float(out["energy"][row])
+            results.append(SimResult(
+                policy=name, makespan=makespan, energy_j=energy,
+                avg_power_w=energy / makespan if makespan > 0 else 0.0,
+                peak_power_w=float(out["peak"][row]),
+                over_budget_time=float(out["over_t"][row]),
+                messages=0, distributes=0, suppressed_reports=0,
+                power_trace=[], job_starts=starts, job_ends=ends))
+        return results
+
+
+def simulate_batch_jax(graph: JobDependencyGraph,
+                       specs: Sequence[NodeSpec],
+                       bounds: Sequence[float],
+                       policy: Union[str, JaxPolicy] = "equal-share",
+                       dt: float = 0.05, latency_s: float = 0.05,
+                       **kwargs) -> List[SimResult]:
+    """One-call facade: one :class:`SimResult` per entry of ``bounds``."""
+    return JaxBatchSimulator(graph, specs, bounds, policy=policy, dt=dt,
+                             latency_s=latency_s, **kwargs).run()

@@ -33,20 +33,76 @@ scenarios inside a sweep grid.
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .graph import JobDependencyGraph, JobId
 from .power import (LUTTable, NodeSpec, batched_operating_point,
                     batched_rates, lut_table)
-from .simulator import SimResult
+from .simulator import OVER_BUDGET_RTOL, SimResult
 
 #: Remaining-work threshold below which a job counts as complete.  Wave
 #: advancement subtracts exactly ``rate * (remaining / rate)`` for the
 #: earliest lane, so residues are pure float noise (~1e-13 at class-C
 #: work scales), far under this.
 _DONE_EPS = 1e-9
+
+
+class GraphArrays(NamedTuple):
+    """Static (graph, cluster) geometry shared by the batch backends.
+
+    One instance serves both the numpy :class:`BatchSimulator` and the
+    compiled :mod:`repro.backends.jax` engine: everything here is a plain
+    array (or the :class:`~repro.core.power.LUTTable` of arrays), indexed
+    with job slot ``J`` (= ``n_jobs``) as the "no job" sentinel — zero
+    work, always complete.
+    """
+
+    job_ids: Tuple[JobId, ...]   # sorted job ids; slot k <-> job_ids[k]
+    work_pad: np.ndarray         # (J+1,) work units, sentinel 0
+    rho_pad: np.ndarray          # (J+1,) cpu_frac, sentinel 1
+    node_seq: np.ndarray         # (N, K+1) per-lane job slots, J padded
+    deps_pad: np.ndarray         # (J+1, D) dependency slots, J padded
+    table: LUTTable              # stacked cluster LUTs
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.job_ids)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_seq.shape[0]
+
+
+def build_graph_arrays(graph: JobDependencyGraph,
+                       specs: Sequence[NodeSpec]) -> GraphArrays:
+    """Flatten a validated graph + cluster into :class:`GraphArrays`."""
+    node_ids = graph.nodes
+    n = len(node_ids)
+    job_ids: List[JobId] = sorted(graph.jobs)
+    j = len(job_ids)
+    k_of = {jid: k for k, jid in enumerate(job_ids)}
+    work_pad = np.zeros(j + 1)
+    rho_pad = np.ones(j + 1)
+    for k, jid in enumerate(job_ids):
+        work_pad[k] = graph.jobs[jid].work
+        rho_pad[k] = graph.jobs[jid].cpu_frac
+    seqs = [[k_of[job.job_id] for job in graph.node_jobs(nid)]
+            for nid in node_ids]
+    k_max = max(len(s) for s in seqs)
+    node_seq = np.full((n, k_max + 1), j, dtype=np.int64)
+    for i, s in enumerate(seqs):
+        node_seq[i, :len(s)] = s
+    d_max = max((len(graph.jobs[jid].deps) for jid in job_ids),
+                default=0) or 1
+    deps_pad = np.full((j + 1, d_max), j, dtype=np.int64)
+    for k, jid in enumerate(job_ids):
+        deps = [k_of[d] for d in graph.jobs[jid].deps]
+        deps_pad[k, :len(deps)] = deps
+    return GraphArrays(job_ids=tuple(job_ids), work_pad=work_pad,
+                       rho_pad=rho_pad, node_seq=node_seq,
+                       deps_pad=deps_pad, table=lut_table(specs))
 
 
 class BatchSimulator:
@@ -88,29 +144,15 @@ class BatchSimulator:
         self.policy = self._resolve_policy(policy, policy_kwargs)
 
         # ---- static graph arrays (shared across the batch) ----
-        self.job_ids: List[JobId] = sorted(graph.jobs)
-        j = len(self.job_ids)
-        self.n_jobs_total = j
-        k_of = {jid: k for k, jid in enumerate(self.job_ids)}
-        # index J is the "no job" sentinel: zero work, always complete
-        self.work_pad = np.zeros(j + 1)
-        self.rho_pad = np.ones(j + 1)
-        for k, jid in enumerate(self.job_ids):
-            self.work_pad[k] = graph.jobs[jid].work
-            self.rho_pad[k] = graph.jobs[jid].cpu_frac
-        seqs = [[k_of[job.job_id] for job in graph.node_jobs(nid)]
-                for nid in self.node_ids]
-        k_max = max(len(s) for s in seqs)
-        self.node_seq = np.full((n, k_max + 1), j, dtype=np.int64)
-        for i, s in enumerate(seqs):
-            self.node_seq[i, :len(s)] = s
-        d_max = max((len(graph.jobs[jid].deps) for jid in self.job_ids),
-                    default=0) or 1
-        self.deps_pad = np.full((j + 1, d_max), j, dtype=np.int64)
-        for k, jid in enumerate(self.job_ids):
-            deps = [k_of[d] for d in graph.jobs[jid].deps]
-            self.deps_pad[k, :len(deps)] = deps
-        self.table: LUTTable = lut_table(self.specs)
+        arrays = build_graph_arrays(graph, self.specs)
+        self.arrays = arrays
+        self.job_ids = list(arrays.job_ids)
+        self.n_jobs_total = arrays.n_jobs
+        self.work_pad = arrays.work_pad
+        self.rho_pad = arrays.rho_pad
+        self.node_seq = arrays.node_seq
+        self.deps_pad = arrays.deps_pad
+        self.table: LUTTable = arrays.table
         self._nidx = np.arange(n)
 
     @staticmethod
@@ -250,8 +292,13 @@ class BatchSimulator:
                 else np.full(b, np.inf)
             t_tick = next_tick - self.row_t
             step = np.minimum(t_comp, t_tick)
-            if np.any(active & ~np.isfinite(step)):
-                bad = int(np.nonzero(active & ~np.isfinite(step))[0][0])
+            # Deadlock is judged on t_comp, not step: starts depend only
+            # on dependency completions, so a row with no running lane
+            # can never recover — even under a tick policy whose t_tick
+            # stays finite forever (which would otherwise spin here for
+            # max_steps waves).
+            if np.any(active & ~np.isfinite(t_comp)):
+                bad = int(np.nonzero(active & ~np.isfinite(t_comp))[0][0])
                 missing = [self.job_ids[k] for k in range(j)
                            if not self.completed[bad, k]]
                 raise RuntimeError(f"deadlock in batch row {bad}: jobs "
@@ -260,8 +307,9 @@ class BatchSimulator:
             self.energy += p_cluster * delta
             self.peak = np.where(active, np.maximum(self.peak, p_cluster),
                                  self.peak)
-            self.over_t += delta * (active
-                                    & (p_cluster > self.bounds + 1e-9))
+            self.over_t += delta * (
+                active & (p_cluster
+                          > self.bounds * (1 + OVER_BUDGET_RTOL) + 1e-9))
             self.remaining -= rate * delta[:, None]
             self.row_t += delta
 

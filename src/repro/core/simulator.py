@@ -28,6 +28,16 @@ from .graph import Job, JobDependencyGraph, JobId
 from .ilp import PowerAssignment
 from .power import NodeSpec, OperatingPoint, op_rate, operating_point
 
+#: Relative slack for the over-budget classifier, shared by every
+#: backend: time counts as "above the cluster bound" only when the draw
+#: exceeds ``bound * (1 + OVER_BUDGET_RTOL) + 1e-9``.  ILP caps carry
+#: solver tolerance (~1e-7 W above the bound) and the compiled float32
+#: backend carries rounding of the same order; neither is a power-bound
+#: violation, and an absolute 1e-9 test would count whole makespans of
+#: such noise.  Real transient surges (the paper's §VII heuristic
+#: overshoots) exceed bounds by watts, far beyond this slack.
+OVER_BUDGET_RTOL = 1e-5
+
 
 @dataclass
 class SimResult:
@@ -163,7 +173,8 @@ class Simulator:
         dt = t - self._last_power_t
         if dt > 0:
             self._energy += self._last_power * dt
-            if self._last_power > self.bound + 1e-9:
+            if self._last_power > self.bound * (1 + OVER_BUDGET_RTOL) \
+                    + 1e-9:
                 self._over_budget_time += dt
         p = sum(self._node_power(rt) for rt in self.nodes.values())
         self._last_power_t = t

@@ -64,6 +64,11 @@ class SweepRecord:
     result: Optional[SimResult]
     error: Optional[str] = None
     elapsed_s: float = 0.0
+    #: Which simulator actually ran this cell: "event", "vector", "jax".
+    backend: str = "event"
+    #: Why the cell did not run on the requested batched backend (None
+    #: when it did) — batched executors fall back silently otherwise.
+    fallback_reason: Optional[str] = None
 
     @property
     def ok(self) -> bool:
@@ -98,6 +103,22 @@ class SweepResult:
     def failures(self) -> List[SweepRecord]:
         return [r for r in self.records if not r.ok]
 
+    def backend_summary(self) -> str:
+        """One line: cells per backend, plus why any cell fell back off
+        the requested batched backend (the satellite of ISSUE 3 — make
+        fallbacks visible instead of silent)."""
+        from collections import Counter
+
+        counts = Counter(r.backend for r in self.records)
+        parts = " ".join(f"{b}={counts[b]}" for b in sorted(counts))
+        reasons = Counter(r.fallback_reason for r in self.records
+                          if r.fallback_reason)
+        if reasons:
+            detail = ", ".join(f"{k} x{n}"
+                               for k, n in sorted(reasons.items()))
+            parts += f" | fallbacks: {detail}"
+        return f"backends: {parts}"
+
     def result(self, name: str, policy: str,
                bound_w: Optional[float] = None) -> SimResult:
         """Exact lookup of one scenario's SimResult (raises if absent)."""
@@ -123,8 +144,11 @@ class SweepResult:
             row: Dict[str, object] = {
                 "name": s.name, "policy": s.policy_key,
                 "bound_w": s.bound_w, "latency_s": s.latency_s,
-                "ok": r.ok, "elapsed_s": r.elapsed_s, **dict(s.tags),
+                "ok": r.ok, "elapsed_s": r.elapsed_s,
+                "backend": r.backend, **dict(s.tags),
             }
+            if r.fallback_reason is not None:
+                row["fallback_reason"] = r.fallback_reason
             if r.ok:
                 row.update(makespan=r.result.makespan,
                            energy_j=r.result.energy_j,
@@ -177,21 +201,29 @@ class SweepEngine:
     """Runs a batch of scenarios with shared setup and a worker pool.
 
     ``executor`` is ``"thread"`` (default), ``"process"``, ``"serial"``,
-    or ``"vector"``.  Process pools require picklable graphs/specs (true
-    for everything in :mod:`repro.core.workloads`) and string policy
-    keys.  The vector executor groups same-shape scenarios — same graph,
-    specs, policy key, and latency, differing only in cluster bound —
-    into :class:`~repro.core.batchsim.BatchSimulator` batches and runs
-    everything else (unknown vector policies, bound schedules, custom
-    policy kwargs or instances) through the event simulator on a thread
-    pool; ``vector_dt`` is the batch backend's control tick.
+    ``"vector"``, or ``"jax"``.  Process pools require picklable
+    graphs/specs (true for everything in :mod:`repro.core.workloads`)
+    and string policy keys.  The batched executors group same-shape
+    scenarios — same graph, specs, policy key, and latency, differing
+    only in cluster bound — into batch-simulator runs:
+    :class:`~repro.core.batchsim.BatchSimulator` for ``"vector"``, the
+    compiled :class:`~repro.backends.jax.engine.JaxBatchSimulator` for
+    ``"jax"``.  Ineligible scenarios fall back down the chain (jax ->
+    vector -> event) with the reason recorded on
+    :attr:`SweepRecord.fallback_reason`; ``vector_dt`` is the batch
+    backends' control tick.
     """
 
     _ILP_POLICIES = ("ilp", "ilp-makespan")
+    #: Executors that group same-shape scenarios into batch-simulator runs
+    #: (public: benchmarks and callers test membership to decide whether a
+    #: backend summary/fallback accounting applies).
+    BATCHED_EXECUTORS = ("vector", "jax")
 
     def __init__(self, max_workers: Optional[int] = None,
                  executor: str = "thread", vector_dt: float = 0.05):
-        if executor not in ("thread", "process", "serial", "vector"):
+        if executor not in ("thread", "process", "serial", "vector",
+                            "jax"):
             raise ValueError(f"unknown executor {executor!r}")
         self.max_workers = max_workers
         self.executor = executor
@@ -257,8 +289,8 @@ class SweepEngine:
         scenarios = list(scenarios)
         one = self._run_one
 
-        if self.executor == "vector":
-            return self._run_vector(scenarios)
+        if self.executor in self.BATCHED_EXECUTORS:
+            return self._run_batched(scenarios, self.executor)
         if self.executor == "serial" or len(scenarios) <= 1:
             return SweepResult([one(s) for s in scenarios])
         if self.executor == "process":
@@ -291,27 +323,94 @@ class SweepEngine:
                 as pool:
             return SweepResult(list(pool.map(one, scenarios)))
 
-    # ------------------------------------------------------ vector backend
+    # ----------------------------------------------------- batched backends
     @staticmethod
-    def _vector_eligible(s: Scenario) -> bool:
+    def _vector_ineligibility(s: Scenario) -> Optional[str]:
+        """Why a scenario cannot run on the numpy batch backend (None
+        when it can)."""
         from repro.policies.vector import has_vector_policy
 
-        return (isinstance(s.policy, str) and has_vector_policy(s.policy)
-                and not s.bound_schedule and not s.policy_kwargs)
+        if not isinstance(s.policy, str):
+            return "policy-instance"
+        if not has_vector_policy(s.policy):
+            return f"no-vector-policy({s.policy})"
+        if s.bound_schedule:
+            return "bound-schedule"
+        if s.policy_kwargs:
+            return "policy-kwargs"
+        return None
+
+    @staticmethod
+    def _jax_ineligibility(s: Scenario) -> Optional[str]:
+        """Why a scenario cannot run on the compiled jax backend."""
+        reason = SweepEngine._vector_ineligibility(s)
+        if reason is not None:
+            return reason
+        from repro.backends.jax import HAS_JAX
+
+        if not HAS_JAX:
+            return "jax-not-installed"
+        from repro.backends.jax import has_jax_policy
+
+        if not has_jax_policy(s.policy):
+            return f"no-jax-policy({s.policy})"
+        if s.trace_every is not None:
+            return "trace-retention"
+        return None
 
     def _vector_key(self, s: Scenario) -> tuple:
         return (id(s.graph), self._specs_sig(s.specs),
                 s.policy, round(s.latency_s, 12), s.trace_every)
 
-    def _run_vector(self, scenarios: Sequence[Scenario]) -> SweepResult:
+    def _plan_backend(self, s: Scenario,
+                      requested: str) -> Tuple[str, Optional[str]]:
+        """(actual backend, fallback reason) for one scenario under the
+        requested batched executor.  ``"jax"`` falls back through the
+        vector backend before landing on the event simulator."""
+        if requested == "jax":
+            reason = self._jax_ineligibility(s)
+            if reason is None:
+                return "jax", None
+            if self._vector_ineligibility(s) is None:
+                return "vector", reason
+            return "event", reason
+        reason = self._vector_ineligibility(s)
+        return ("vector", None) if reason is None else ("event", reason)
+
+    def _make_batch_sim(self, backend: str, first: Scenario,
+                        bounds: List[float],
+                        assignments: List[Optional[PowerAssignment]]):
+        kwargs = {}
+        if first.policy in self._ILP_POLICIES:
+            kwargs["assignments"] = assignments
+        if backend == "jax":
+            from repro.backends.jax import (JaxBatchSimulator,
+                                            get_jax_policy)
+
+            return JaxBatchSimulator(
+                first.graph, list(first.specs), bounds,
+                policy=get_jax_policy(first.policy, **kwargs),
+                dt=self.vector_dt, latency_s=first.latency_s,
+                trace_every=first.trace_every)
         from repro.policies.vector import get_vector_policy
 
+        return BatchSimulator(
+            first.graph, list(first.specs), bounds,
+            policy=get_vector_policy(first.policy, **kwargs),
+            dt=self.vector_dt, latency_s=first.latency_s,
+            trace_every=first.trace_every)
+
+    def _run_batched(self, scenarios: Sequence[Scenario],
+                     requested: str) -> SweepResult:
         records: List[Optional[SweepRecord]] = [None] * len(scenarios)
+        plans = [self._plan_backend(s, requested) for s in scenarios]
         groups: Dict[tuple, List[int]] = {}
         leftovers: List[int] = []
         for k, s in enumerate(scenarios):
-            if self._vector_eligible(s):
-                groups.setdefault(self._vector_key(s), []).append(k)
+            backend, _ = plans[k]
+            if backend in self.BATCHED_EXECUTORS:
+                groups.setdefault((backend, self._vector_key(s)),
+                                  []).append(k)
             else:
                 leftovers.append(k)
 
@@ -321,7 +420,7 @@ class SweepEngine:
             except Exception as e:  # noqa: BLE001
                 return k, None, f"{type(e).__name__}: {e}"
 
-        for idxs in groups.values():
+        for (backend, _), idxs in groups.items():
             t0 = time.perf_counter()
             first = scenarios[idxs[0]]
             # Shared setup first: a failing ILP solve is a per-scenario
@@ -338,34 +437,33 @@ class SweepEngine:
             assignments: List[Optional[PowerAssignment]] = []
             for k, assignment, err in solved:
                 if err is not None:
-                    records[k] = SweepRecord(scenarios[k], None, error=err)
+                    records[k] = SweepRecord(scenarios[k], None, error=err,
+                                             backend=backend,
+                                             fallback_reason=plans[k][1])
                 else:
                     assignments.append(assignment)
                     batch_idx.append(k)
             if not batch_idx:
                 continue
-            kwargs = {}
-            if first.policy in self._ILP_POLICIES:
-                kwargs["assignments"] = assignments
             try:
-                policy = get_vector_policy(first.policy, **kwargs)
-                sim = BatchSimulator(
-                    first.graph, list(first.specs),
-                    [scenarios[k].bound_w for k in batch_idx],
-                    policy=policy, dt=self.vector_dt,
-                    latency_s=first.latency_s,
-                    trace_every=first.trace_every)
+                sim = self._make_batch_sim(
+                    backend, first,
+                    [scenarios[k].bound_w for k in batch_idx], assignments)
                 results = sim.run()
                 per_cell = (time.perf_counter() - t0) / len(batch_idx)
                 for k, result in zip(batch_idx, results):
                     records[k] = SweepRecord(scenarios[k], result,
-                                             elapsed_s=per_cell)
+                                             elapsed_s=per_cell,
+                                             backend=backend,
+                                             fallback_reason=plans[k][1])
             except Exception as e:  # noqa: BLE001
                 err = f"{type(e).__name__}: {e}"
                 per_cell = (time.perf_counter() - t0) / len(batch_idx)
                 for k in batch_idx:
                     records[k] = SweepRecord(scenarios[k], None, error=err,
-                                             elapsed_s=per_cell)
+                                             elapsed_s=per_cell,
+                                             backend=backend,
+                                             fallback_reason=plans[k][1])
 
         if leftovers:
             left = [scenarios[k] for k in leftovers]
@@ -376,6 +474,7 @@ class SweepEngine:
                         max_workers=self.max_workers) as pool:
                     done = list(pool.map(self._run_one, left))
             for k, rec in zip(leftovers, done):
+                rec.fallback_reason = plans[k][1]
                 records[k] = rec
         return SweepResult(records)
 

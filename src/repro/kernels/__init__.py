@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# power_step.py is the exception that proves the rule: the fused
+# power-redistribution wave step IS this repo's hot spot (the per-wave
+# inner loop of the batch simulators). It ships its own pure-jnp
+# reference in-module and is consumed by repro.backends.jax.engine,
+# not by the model zoo's ops.py facade.

@@ -1,10 +1,16 @@
-"""String-keyed policy registry.
+"""String-keyed policy registries.
 
 ``register_policy("name")`` decorates a :class:`PowerPolicy` subclass (or
 any zero/keyword-arg factory); ``get_policy("name", **kwargs)`` builds a
 fresh instance.  The simulator, the sweep engine, and the benchmarks
 resolve policies exclusively through this table, so adding a policy means
 writing one module and importing it from :mod:`repro.policies`.
+
+The vector (:mod:`repro.policies.vector`) and jax
+(:mod:`repro.backends.jax.policy_fns`) policy subsystems each keep their
+own table of the same shape; :class:`PolicyRegistry` is the one
+implementation behind all three, so registry behaviour (alias handling,
+error wording, the factory type check) cannot drift between backends.
 """
 
 from __future__ import annotations
@@ -13,36 +19,76 @@ from typing import Callable, Dict, List
 
 from .base import PowerPolicy
 
-_REGISTRY: Dict[str, Callable[..., PowerPolicy]] = {}
+
+class PolicyRegistry:
+    """One string-keyed factory table with registration + lookup.
+
+    ``kind`` labels the table in error messages (``"vector"`` ->
+    "no vector policy ..."); the event registry passes none and keeps
+    its historical "unknown policy ..." wording.  ``base_cls`` is what
+    every factory must produce.
+    """
+
+    def __init__(self, base_cls: type, kind: str = ""):
+        self.base_cls = base_cls
+        self.kind = kind
+        self._table: Dict[str, Callable] = {}
+
+    def register(self, name: str, *aliases: str):
+        """Class decorator: register a factory under ``name`` (+aliases)."""
+        label = f"{self.kind} policy" if self.kind else "policy"
+
+        def deco(factory: Callable):
+            for key in (name, *aliases):
+                if key in self._table:
+                    raise ValueError(f"{label} {key!r} already registered")
+                self._table[key] = factory
+            return factory
+
+        return deco
+
+    def get(self, name: str, **kwargs):
+        """Instantiate a registered policy by key."""
+        try:
+            factory = self._table[name]
+        except KeyError:
+            missing = (f"no {self.kind} policy" if self.kind
+                       else "unknown policy")
+            raise KeyError(f"{missing} {name!r}; "
+                           f"available: {self.names()}") from None
+        policy = factory(**kwargs)
+        if not isinstance(policy, self.base_cls):
+            raise TypeError(f"factory for {name!r} returned "
+                            f"{type(policy)!r}, not a "
+                            f"{self.base_cls.__name__}")
+        return policy
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._table
+
+    def __getitem__(self, name: str) -> Callable:
+        return self._table[name]
+
+    def names(self) -> List[str]:
+        return sorted(self._table)
+
+
+_EVENT = PolicyRegistry(PowerPolicy)
+
+#: Historical name for the event registry's table (tests deregister
+#: throwaway policies through it) — the same dict the instance owns.
+_REGISTRY = _EVENT._table
 
 
 def register_policy(name: str, *aliases: str):
     """Class decorator: register a policy factory under ``name`` (+aliases)."""
-
-    def deco(factory: Callable[..., PowerPolicy]):
-        for key in (name, *aliases):
-            if key in _REGISTRY:
-                raise ValueError(f"policy {key!r} already registered")
-            _REGISTRY[key] = factory
-        return factory
-
-    return deco
+    return _EVENT.register(name, *aliases)
 
 
 def get_policy(name: str, **kwargs) -> PowerPolicy:
     """Instantiate a registered policy by key."""
-    try:
-        factory = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown policy {name!r}; available: {available_policies()}"
-        ) from None
-    policy = factory(**kwargs)
-    if not isinstance(policy, PowerPolicy):
-        raise TypeError(f"factory for {name!r} returned {type(policy)!r}, "
-                        "not a PowerPolicy")
-    return policy
+    return _EVENT.get(name, **kwargs)
 
 
 def available_policies() -> List[str]:
-    return sorted(_REGISTRY)
+    return _EVENT.names()

@@ -33,41 +33,28 @@ import numpy as np
 
 from repro.core.power import LUTTable
 
-_VECTOR_REGISTRY: Dict[str, Callable[..., "VectorPolicy"]] = {}
+from .registry import PolicyRegistry
 
 
-def register_vector_policy(name: str, *aliases: str):
-    """Class decorator: register a vector-policy factory under ``name``."""
-
-    def deco(factory: Callable[..., "VectorPolicy"]):
-        for key in (name, *aliases):
-            if key in _VECTOR_REGISTRY:
-                raise ValueError(f"vector policy {key!r} already registered")
-            _VECTOR_REGISTRY[key] = factory
-        return factory
-
-    return deco
-
-
-def get_vector_policy(name: str, **kwargs) -> "VectorPolicy":
-    try:
-        factory = _VECTOR_REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"no vector policy {name!r}; "
-                       f"available: {vector_policies()}") from None
-    policy = factory(**kwargs)
-    if not isinstance(policy, VectorPolicy):
-        raise TypeError(f"factory for {name!r} returned {type(policy)!r}, "
-                        "not a VectorPolicy")
-    return policy
-
-
-def has_vector_policy(name: str) -> bool:
-    return name in _VECTOR_REGISTRY
-
-
-def vector_policies() -> List[str]:
-    return sorted(_VECTOR_REGISTRY)
+def resolve_assignments(bounds: Sequence[float],
+                        assignments: Optional[Sequence],
+                        solve: Callable[[float], object]) -> List[object]:
+    """One :class:`~repro.core.ilp.PowerAssignment` per batch row: the
+    pre-solved entry when given (the sweep engine's shared-setup cache),
+    else ``solve(bound)`` once per unique bound (9-dp key).  Shared by
+    the vector and jax ILP policies so their solve/caching behaviour
+    cannot drift."""
+    cache: Dict[float, object] = {}
+    out: List[object] = []
+    for b, bound in enumerate(bounds):
+        assignment = assignments[b] if assignments is not None else None
+        if assignment is None:
+            key = round(float(bound), 9)
+            if key not in cache:
+                cache[key] = solve(float(bound))
+            assignment = cache[key]
+        out.append(assignment)
+    return out
 
 
 class VectorPolicy:
@@ -99,6 +86,26 @@ class VectorPolicy:
 
     def on_tick(self, sim, rows: np.ndarray) -> None:
         """A ``dt`` boundary passed for boolean row mask ``rows``."""
+
+
+_REGISTRY = PolicyRegistry(VectorPolicy, "vector")
+
+
+def register_vector_policy(name: str, *aliases: str):
+    """Class decorator: register a vector-policy factory under ``name``."""
+    return _REGISTRY.register(name, *aliases)
+
+
+def get_vector_policy(name: str, **kwargs) -> "VectorPolicy":
+    return _REGISTRY.get(name, **kwargs)
+
+
+def has_vector_policy(name: str) -> bool:
+    return name in _REGISTRY
+
+
+def vector_policies() -> List[str]:
+    return _REGISTRY.names()
 
 
 @register_vector_policy("equal-share", "equal_share")
@@ -136,16 +143,11 @@ class VectorIlpStatic(VectorPolicy):
                       time_limit=self.time_limit)
 
     def setup(self, sim) -> np.ndarray:
-        cache: Dict[float, object] = {}
+        resolved = resolve_assignments(sim.bounds, self.assignments,
+                                       lambda bound: self._solve(sim,
+                                                                 bound))
         caps_job = np.zeros((sim.n_rows, sim.n_jobs_total))
-        for b in range(sim.n_rows):
-            assignment = (self.assignments[b] if self.assignments is not None
-                          else None)
-            if assignment is None:
-                key = round(float(sim.bounds[b]), 9)
-                if key not in cache:
-                    cache[key] = self._solve(sim, float(sim.bounds[b]))
-                assignment = cache[key]
+        for b, assignment in enumerate(resolved):
             for k, jid in enumerate(sim.job_ids):
                 caps_job[b, k] = assignment.bounds_w[jid]
         self._caps_job = caps_job

@@ -1,0 +1,24 @@
+"""Collection guard for the optional jax dependency.
+
+``jax`` moved to the ``[jax]`` optional-dependency group (ISSUE 3): the
+core paper library (graph / power / ilp / simulators / sweep) runs on
+numpy + scipy alone, so tier-1 must pass in an environment without jax.
+Modules that exercise the jax workload zoo, the kernels, or the
+compiled backend are skipped at collection time when jax is absent;
+jax-aware suites that guard internally (``test_batchsim_diff``,
+``test_jax_backend``) handle their own skips.
+"""
+
+import importlib.util
+
+if importlib.util.find_spec("jax") is None:
+    collect_ignore = [
+        "test_attention_moe.py",
+        "test_dryrun_cli.py",       # subprocess imports repro.launch
+        "test_hlo_roofline.py",
+        "test_kernels.py",
+        "test_models_smoke.py",
+        "test_runtime_serving.py",
+        "test_ssm_xlstm.py",
+        "test_substrates.py",
+    ]

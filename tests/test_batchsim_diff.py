@@ -1,16 +1,19 @@
-"""Differential oracle for the vectorized batch backend (ISSUE 2).
+"""Differential oracle for the batch backends (ISSUEs 2 & 3).
 
-The batch simulator is only trustworthy against the discrete-event
+The batch simulators are only trustworthy against the discrete-event
 simulator's answers.  For every *exact* registered vector policy
 (``equal-share``, ``ilp``, ``ilp-makespan``, ``oracle`` — cap decisions
-that depend only on state transitions, which the batch backend resolves
-at exact event times) the two backends must agree on makespan within
+that depend only on state transitions, which the batch backends resolve
+at exact event times) the backends must agree on makespan within
 ``2 * dt`` and on energy within 1% across the Listing-2 family, a
-hand-rolled TraceBuilder graph, and the NPB-analogue generators.  The
-tick-quantized vector ``heuristic`` (``exact=False``) is held to a
-looser envelope.  The SweepEngine ``executor="vector"`` path is checked
-against the thread path on a whole grid, including fallback of
-non-vectorizable policies.
+hand-rolled TraceBuilder graph, and the NPB-analogue generators.  When
+jax is installed the comparison is *three-way*: event vs numpy-vector
+vs the compiled :mod:`repro.backends.jax` engine, held to the same
+envelopes.  The tick-quantized ``heuristic`` (``exact=False``) is held
+to a looser envelope.  The SweepEngine ``executor="vector"`` and
+``executor="jax"`` paths are checked against the thread path on whole
+grids, including fallback of non-batchable policies — which must now be
+*visible* via ``SweepRecord.backend`` / ``fallback_reason``.
 """
 
 import pytest
@@ -20,7 +23,11 @@ from repro.core import (Scenario, SweepEngine, TraceBuilder, cg_like,
                         is_like, listing2_graph, listing2_random,
                         listing2_uniform, scenario_grid, simulate,
                         simulate_batch)
+from repro.backends.jax import HAS_JAX
 from repro.policies import get_vector_policy, vector_policies
+
+if HAS_JAX:
+    from repro.backends.jax import simulate_batch_jax
 
 DT = 0.05
 MAKESPAN_ATOL = 2 * DT
@@ -70,16 +77,25 @@ _ids = [c[0] for c in LISTING2_CASES + GENERATED_CASES]
 
 
 def assert_backends_agree(graph, specs, bounds, policy):
-    batch = simulate_batch(graph, specs, bounds, policy, dt=DT)
-    for bound, vec in zip(bounds, batch):
+    """Event vs vector — and, when jax is installed, vs the compiled
+    engine — under the same differential envelopes."""
+    batch = {"vec": simulate_batch(graph, specs, bounds, policy, dt=DT)}
+    if HAS_JAX:
+        batch["jax"] = simulate_batch_jax(graph, specs, bounds, policy,
+                                          dt=DT)
+    for i, bound in enumerate(bounds):
         ev = simulate(graph, specs, bound, policy)
-        assert vec.makespan == pytest.approx(ev.makespan,
-                                             abs=MAKESPAN_ATOL), \
-            f"{policy} @ {bound}W: event {ev.makespan} vs vec {vec.makespan}"
-        assert vec.energy_j == pytest.approx(ev.energy_j, rel=ENERGY_RTOL)
-        assert vec.over_budget_time == pytest.approx(ev.over_budget_time,
-                                                     abs=2 * DT)
-        assert vec.job_ends.keys() == ev.job_ends.keys()
+        for label, results in batch.items():
+            got = results[i]
+            assert got.makespan == pytest.approx(ev.makespan,
+                                                 abs=MAKESPAN_ATOL), \
+                (f"{policy} @ {bound}W: event {ev.makespan} vs "
+                 f"{label} {got.makespan}")
+            assert got.energy_j == pytest.approx(ev.energy_j,
+                                                 rel=ENERGY_RTOL)
+            assert got.over_budget_time == pytest.approx(
+                ev.over_budget_time, abs=2 * DT)
+            assert got.job_ends.keys() == ev.job_ends.keys()
 
 
 class TestExactPolicies:
@@ -166,6 +182,31 @@ class TestSweepVectorExecutor:
             assert sweep.result("l2", policy, 4.0).makespan == \
                 pytest.approx(ref.makespan, rel=1e-12)
 
+    def test_fallbacks_are_recorded_not_silent(self):
+        """Every record carries the backend that actually ran it, and
+        fallbacks off the requested batched backend carry a reason."""
+        from repro.policies import OnlineHeuristicPolicy
+
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        scenarios = scenario_grid(
+            {"l2": g}, specs, [4.0],
+            ("equal-share", "countdown", OnlineHeuristicPolicy()))
+        sweep = SweepEngine(executor="vector").run(scenarios)
+        by_policy = {r.scenario.policy_key: r for r in sweep.records}
+        assert by_policy["equal-share"].backend == "vector"
+        assert by_policy["equal-share"].fallback_reason is None
+        assert by_policy["countdown"].backend == "event"
+        assert by_policy["countdown"].fallback_reason == \
+            "no-vector-policy(countdown)"
+        assert by_policy["heuristic"].backend == "event"
+        assert by_policy["heuristic"].fallback_reason == "policy-instance"
+        summary = sweep.backend_summary()
+        assert "event=2" in summary and "vector=1" in summary
+        assert "no-vector-policy(countdown)" in summary
+        rows = sweep.rows()
+        assert all("backend" in row for row in rows)
+
     def test_bound_schedule_falls_back(self):
         g = listing2_graph()
         specs = tuple(homogeneous_cluster(3))
@@ -189,6 +230,68 @@ class TestSweepVectorExecutor:
                      policy="ilp"),
         ]
         sweep = SweepEngine(executor="vector").run(scenarios)
+        assert len(sweep.failures) == 1
+        assert sweep.failures[0].scenario.name == "bad"
+        assert sweep.result("ok", "ilp", 6.0).makespan > 0
+
+
+@pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+class TestSweepJaxExecutor:
+    def test_matches_thread_executor(self):
+        specs = homogeneous_cluster(3)
+        graphs = {"l2": listing2_graph(),
+                  "l2r": listing2_random(3.0, seed=7)}
+        scenarios = scenario_grid(graphs, specs, [4.0, 9.0],
+                                  ("equal-share", "ilp", "oracle"))
+        ev = SweepEngine(executor="thread").run(scenarios)
+        jx = SweepEngine(executor="jax").run(scenarios)
+        assert not ev.failures and not jx.failures
+        assert all(r.backend == "jax" for r in jx.records)
+        for a, b in zip(ev.records, jx.records):
+            assert b.result.makespan == pytest.approx(a.result.makespan,
+                                                      abs=MAKESPAN_ATOL)
+            assert b.result.energy_j == pytest.approx(a.result.energy_j,
+                                                      rel=ENERGY_RTOL)
+
+    def test_falls_back_through_vector_to_event(self):
+        """countdown has neither a jax nor a vector implementation ->
+        event; a traced scenario is vector-eligible but not
+        jax-eligible -> vector, reason recorded."""
+        g = listing2_graph()
+        specs = tuple(homogeneous_cluster(3))
+        scenarios = [
+            Scenario(name="plain", graph=g, specs=specs, bound_w=6.0,
+                     policy="equal-share"),
+            Scenario(name="traced", graph=g, specs=specs, bound_w=6.0,
+                     policy="equal-share", trace_every=0.0),
+            Scenario(name="cd", graph=g, specs=specs, bound_w=6.0,
+                     policy="countdown"),
+        ]
+        sweep = SweepEngine(executor="jax").run(scenarios)
+        assert not sweep.failures
+        by_name = {r.scenario.name: r for r in sweep.records}
+        assert by_name["plain"].backend == "jax"
+        assert by_name["plain"].fallback_reason is None
+        assert by_name["traced"].backend == "vector"
+        assert by_name["traced"].fallback_reason == "trace-retention"
+        assert by_name["traced"].result.power_trace  # trace retained
+        assert by_name["cd"].backend == "event"
+        assert by_name["cd"].fallback_reason == \
+            "no-vector-policy(countdown)"
+        ref = simulate(g, specs, 6.0, "countdown")
+        assert by_name["cd"].result.makespan == \
+            pytest.approx(ref.makespan, rel=1e-12)
+
+    def test_batch_failure_is_per_scenario(self):
+        g = listing2_graph()
+        specs = tuple(homogeneous_cluster(3))
+        scenarios = [
+            Scenario(name="ok", graph=g, specs=specs, bound_w=6.0,
+                     policy="ilp"),
+            Scenario(name="bad", graph=g, specs=specs, bound_w=0.1,
+                     policy="ilp"),
+        ]
+        sweep = SweepEngine(executor="jax").run(scenarios)
         assert len(sweep.failures) == 1
         assert sweep.failures[0].scenario.name == "bad"
         assert sweep.result("ok", "ilp", 6.0).makespan > 0

@@ -1,0 +1,162 @@
+"""Unit tests for the compiled JAX execution backend (ISSUE 3).
+
+Differential three-way coverage lives in ``test_batchsim_diff.py``;
+this file covers the engine's own contract: validation, the jittable
+policy registry, kernel-vs-reference engine parity, the heuristic's
+approximate envelope, and the guarded-import surface that must stay
+importable without jax installed.
+"""
+
+import pytest
+
+from repro.backends import jax as jax_backend
+from repro.core import (homogeneous_cluster, listing2_graph, simulate,
+                        simulate_batch)
+
+jax = pytest.importorskip("jax")
+
+from repro.backends.jax import (JaxBatchSimulator,  # noqa: E402
+                                simulate_batch_jax)
+from repro.backends.jax.policy_fns import (get_jax_policy,  # noqa: E402
+                                           has_jax_policy, jax_policies)
+
+
+class TestGuardedSurface:
+    def test_has_jax_reflects_environment(self):
+        assert jax_backend.HAS_JAX is True
+        assert jax_backend.jax_available() is True
+
+    def test_unknown_attribute_raises(self):
+        with pytest.raises(AttributeError):
+            jax_backend.no_such_symbol  # noqa: B018
+
+
+class TestPolicyRegistry:
+    def test_all_vector_policies_have_jax_counterparts(self):
+        from repro.policies import vector_policies
+
+        assert set(vector_policies()) <= set(jax_policies())
+
+    def test_exactness_contracts(self):
+        for name in ("equal-share", "ilp", "ilp-makespan", "oracle"):
+            assert get_jax_policy(name).exact, name
+        heur = get_jax_policy("heuristic")
+        assert not heur.exact and heur.wants_ticks
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(KeyError, match="no jax policy"):
+            get_jax_policy("countdown")
+        assert not has_jax_policy("countdown")
+
+
+class TestValidation:
+    def test_rejects_bad_dt(self):
+        with pytest.raises(ValueError, match="dt"):
+            simulate_batch_jax(listing2_graph(), homogeneous_cluster(3),
+                               [6.0], dt=0.0)
+
+    def test_rejects_empty_bounds(self):
+        with pytest.raises(ValueError, match="bounds"):
+            simulate_batch_jax(listing2_graph(), homogeneous_cluster(3),
+                               [])
+
+    def test_rejects_spec_mismatch(self):
+        with pytest.raises(ValueError, match="NodeSpec"):
+            simulate_batch_jax(listing2_graph(), homogeneous_cluster(2),
+                               [6.0])
+
+    def test_rejects_trace_retention(self):
+        with pytest.raises(ValueError, match="trace"):
+            simulate_batch_jax(listing2_graph(), homogeneous_cluster(3),
+                               [6.0], trace_every=0.0)
+
+
+class TestEngine:
+    def test_matches_event_simulator_tightly(self):
+        """Static caps + wave advancement at exact event times: float32
+        noise only, far inside the differential envelope."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        for bound in (2.5, 12.0):
+            ev = simulate(g, specs, bound, "equal-share")
+            jx = simulate_batch_jax(g, specs, [bound], "equal-share")[0]
+            assert jx.makespan == pytest.approx(ev.makespan, rel=1e-5)
+            assert jx.energy_j == pytest.approx(ev.energy_j, rel=1e-5)
+            assert jx.job_ends.keys() == ev.job_ends.keys()
+
+    def test_deadlock_detection(self):
+        """An acyclic DAG whose deps cross against the lanes' serial
+        execution order: each lane's first job waits on the other
+        lane's *second* job, so nothing ever runs."""
+        from repro.core import JobDependencyGraph
+
+        g = JobDependencyGraph()
+        g.add(0, 1, 5.0, deps=[(1, 2)])
+        g.add(0, 2, 5.0)
+        g.add(1, 1, 5.0, deps=[(0, 2)])
+        g.add(1, 2, 5.0)
+        with pytest.raises(RuntimeError, match="deadlock"):
+            simulate_batch_jax(g, homogeneous_cluster(2), [6.0])
+        # Tick policies keep a finite next-tick forever; the stall check
+        # must still fire on the completion horizon, not spin max_steps.
+        with pytest.raises(RuntimeError, match="deadlock"):
+            simulate_batch_jax(g, homogeneous_cluster(2), [6.0],
+                               "heuristic")
+
+    def test_heuristic_tracks_vector_heuristic(self):
+        """Same tick-quantized control plane as the numpy vector
+        heuristic: the two approximate backends agree closely, and both
+        stay within the event heuristic's documented 10% envelope."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        for bound in (2.5, 6.0, 12.0):
+            vec = simulate_batch(g, specs, [bound], "heuristic",
+                                 dt=0.05)[0]
+            jx = simulate_batch_jax(g, specs, [bound], "heuristic",
+                                    dt=0.05)[0]
+            ev = simulate(g, specs, bound, "heuristic")
+            assert jx.makespan == pytest.approx(vec.makespan, rel=0.02)
+            assert jx.makespan == pytest.approx(ev.makespan, rel=0.10)
+
+    def test_heuristic_surges_above_bound(self):
+        """The delayed cap application reproduces the vector
+        heuristic's transient over-budget surges at tight bounds —
+        same control plane, same surge accounting."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        bound = 1.8
+        vec = simulate_batch(g, specs, [bound], "heuristic", dt=0.05)[0]
+        jx = simulate_batch_jax(g, specs, [bound], "heuristic",
+                                dt=0.05)[0]
+        assert jx.peak_power_w > bound
+        assert jx.over_budget_time > 0
+        assert jx.over_budget_time == pytest.approx(
+            vec.over_budget_time, rel=0.05)
+
+    def test_policy_instance_and_kwargs_routes(self):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        policy = get_jax_policy("equal-share")
+        r = JaxBatchSimulator(g, specs, [6.0], policy=policy).run()[0]
+        ref = simulate(g, specs, 6.0, "equal-share")
+        assert r.makespan == pytest.approx(ref.makespan, rel=1e-5)
+        with pytest.raises(ValueError, match="policy_kwargs"):
+            JaxBatchSimulator(g, specs, [6.0], policy=policy,
+                              time_limit=5.0)
+
+
+class TestKernelEngineParity:
+    def test_use_kernel_matches_ref_engine(self):
+        """The Pallas-kernel engine (interpret mode) and the jnp
+        reference engine walk identical wave sequences."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        bounds = [2.5, 6.0, 12.0]
+        for policy in ("equal-share", "oracle"):
+            ref = simulate_batch_jax(g, specs, bounds, policy)
+            ker = simulate_batch_jax(g, specs, bounds, policy,
+                                     use_kernel=True,
+                                     kernel_interpret=True)
+            for a, b in zip(ref, ker):
+                assert b.makespan == pytest.approx(a.makespan, rel=1e-6)
+                assert b.energy_j == pytest.approx(a.energy_j, rel=1e-6)
