@@ -1,0 +1,130 @@
+"""Mixed scenario-family sweep: heterogeneous shapes, one batched run.
+
+The paper's evaluation is a *family* of scenario shapes — NPB classes,
+skew levels, cluster sizes, power bounds (Figs. 8-9) — and related
+systems (COUNTDOWN, EcoShift-style cap shifting) add time-varying power
+caps on top.  This bench sweeps exactly that: the seeded
+:mod:`repro.core.scenarios` families (Listing-2 variants, NPB analogues,
+random layered / fork-join DAGs, pipeline/MoE steps, some members with
+mid-run bound drops) crossed with bounds and the backend-complete
+policies, ~1k cells in ``--full`` mode.
+
+Under ``--backend vector``/``jax`` the sweep engine buckets the mixed
+shapes into a handful of padded batches (``backend_summary`` shows the
+accounting — the point of this bench is *zero* event fallbacks), and the
+bench reports wall-clock against the per-scenario thread executor plus
+the max makespan deviation over the exact policies.  Results land in
+``BENCH_sweep.json`` via :data:`benchmarks.common.BENCH_RECORDS`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import (SweepEngine, lm_family, mixed_family, npb_family,
+                        random_layered_family)
+
+from .common import BENCH_RECORDS, csv_line
+
+#: Policies held to the exact differential contract — these carry the
+#: bulk throughput grid (ILP is excluded: per-cell solver time would
+#: dominate what is meant to be a simulator benchmark).
+EXACT_POLICIES = ("equal-share", "oracle")
+
+#: The tick-quantized heuristic rides along on the (small) mixed family
+#: only: its vectorization pays one wave per ``dt`` of simulated time,
+#: so on long-makespan members it measures tick density rather than
+#: batching throughput (see docs/backends.md).
+TICK_POLICIES = ("heuristic",)
+
+
+def build_family_scenarios(quick: bool = False, seed: int = 0) -> list:
+    """The bench grid: the kitchen-sink mixed family (all policies) in
+    quick mode; plus layered/NPB/LM families (exact policies) and a
+    denser bound axis in full mode (~1.1k cells)."""
+    fracs = (0.12, 0.3, 0.5, 0.7, 0.9) if quick else \
+        tuple(0.06 + 0.05 * i for i in range(18))
+    fams = [mixed_family(seed, policies=EXACT_POLICIES + TICK_POLICIES,
+                         bound_fracs=fracs)]
+    if not quick:
+        fams += [
+            random_layered_family(seed + 1, n_members=8,
+                                  policies=EXACT_POLICIES,
+                                  bound_fracs=fracs),
+            npb_family(seed + 2, policies=EXACT_POLICIES,
+                       bound_fracs=fracs),
+            lm_family(seed + 3, policies=EXACT_POLICIES,
+                      bound_fracs=fracs),
+        ]
+    return [s for fam in fams for s in fam.scenarios()]
+
+
+def main(quick: bool = False, backend: str = "event") -> List[str]:
+    scenarios = build_family_scenarios(quick)
+    shapes = sorted({s.tags["shape"] for s in scenarios})
+    print(f"family sweep: {len(scenarios)} cells over {len(shapes)} "
+          f"(N, J) shapes: {', '.join(shapes)}")
+
+    t0 = time.perf_counter()
+    ev = SweepEngine(executor="thread").run(scenarios)
+    t_event = time.perf_counter() - t0
+    if ev.failures:
+        raise RuntimeError(f"event failures: "
+                           f"{[(r.scenario.name, r.error) for r in ev.failures]}")
+    cells = len(scenarios)
+    bench = {"grid": {"cells": cells, "shapes": shapes,
+                      "policies": sorted({s.policy_key
+                                          for s in scenarios})},
+             "event": {"wall_s": t_event,
+                       "us_per_cell": t_event * 1e6 / cells}}
+    print(f"  event (thread pool): {t_event:.3f}s")
+    out = [csv_line("family_event", t_event * 1e6 / cells,
+                    f"cells={cells}")]
+
+    if backend in SweepEngine.BATCHED_EXECUTORS:
+        if backend == "jax":
+            from repro.backends.jax import HAS_JAX
+
+            if not HAS_JAX:
+                print("  jax requested but not installed; timing the "
+                      "vector buckets instead (pip install -e .[jax])")
+                backend = "vector"
+        engine = SweepEngine(executor=backend)
+        if backend == "jax":
+            engine.run(scenarios)             # compile warm-up per bucket
+        t0 = time.perf_counter()
+        sweep = engine.run(scenarios)
+        t_batched = time.perf_counter() - t0
+        if sweep.failures:
+            raise RuntimeError(f"{backend} failures: "
+                               f"{[(r.scenario.name, r.error) for r in sweep.failures]}")
+        print(f"  {sweep.backend_summary()}")
+        fell_back = [r for r in sweep.records if r.backend == "event"]
+        if fell_back:
+            raise RuntimeError(
+                f"{len(fell_back)} cells fell back to the event "
+                f"simulator — the mixed family must batch completely")
+        maxdiff = max(
+            abs(a.result.makespan - b.result.makespan)
+            for a, b in zip(ev.records, sweep.records)
+            if a.scenario.policy_key in EXACT_POLICIES)
+        n_batches = len({r.bucket for r in sweep.records if r.bucket})
+        speedup = t_event / t_batched
+        print(f"  {backend}: {t_batched:.3f}s in {n_batches} batches  "
+              f"speedup {speedup:.1f}x vs event  "
+              f"max |dmakespan| (exact) {maxdiff:.2e}")
+        bench[backend] = {"wall_s": t_batched,
+                          "us_per_cell": t_batched * 1e6 / cells,
+                          "batches": n_batches,
+                          "max_makespan_diff_vs_event": maxdiff}
+        out.append(csv_line(f"family_{backend}",
+                            t_batched * 1e6 / cells,
+                            f"speedup={speedup:.1f}x;cells={cells};"
+                            f"batches={n_batches};maxdiff={maxdiff:.2e}"))
+    BENCH_RECORDS["family_sweep"] = bench
+    return out
+
+
+if __name__ == "__main__":
+    main()

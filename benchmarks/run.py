@@ -48,14 +48,16 @@ def main(argv=None) -> int:
 
     from repro.core import SweepEngine
 
-    from . import (depth_tables, fig8_power_sweep, fig9_stddev_sweep,
-                   lm_workloads, npb_analogues, roofline_report)
+    from . import (depth_tables, family_sweep, fig8_power_sweep,
+                   fig9_stddev_sweep, lm_workloads, npb_analogues,
+                   roofline_report)
 
     benches = {
         "depth_tables": depth_tables.main,        # Tables I & II
         "fig8": fig8_power_sweep.main,            # Fig. 8 (+ uniform §VI)
         "fig9": fig9_stddev_sweep.main,           # Fig. 9
         "npb": npb_analogues.main,                # Figs. 11-13
+        "family": family_sweep.main,              # mixed scenario families
         "lm_workloads": lm_workloads.main,        # pipeline/MoE graphs
         "roofline": roofline_report.main,         # §Roofline table
     }

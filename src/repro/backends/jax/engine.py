@@ -5,15 +5,29 @@ wave time advancement with completions, dependency hand-offs, energy
 accounting and policy caps resolved at exact event times — ported to a
 compiled ``jax.lax.while_loop`` stepper.  The stepper is written for a
 *single* scenario row (``(N,)`` lane state, ``(J+1,)`` job bookkeeping)
-and ``jax.vmap``-ed over the bound axis, which batches the outer wave
-loop (rows that finish early freeze while the rest keep stepping) and
-the inner settle loop for free.
+and ``jax.vmap``-ed over the row axis.  Two batch layouts share it:
+
+* **shared** (the constructor): one graph and cluster, B bounds — the
+  static geometry (:class:`_Ctx`) broadcasts (``in_axes=None``) and
+  only the bound axis is mapped;
+* **stacked** (:meth:`JaxBatchSimulator.padded`): B different (graph,
+  cluster) rows padded to one envelope — the geometry itself carries a
+  leading row axis and is mapped with the bounds.  Padding is masked
+  exactly as in the numpy backend (phantom job slots born completed,
+  phantom lanes with zero idle draw; see
+  :class:`repro.core.batchsim.BatchArrays`).
 
 Per wave, the hot path — LUT power->frequency gather, per-node rate
 computation, earliest-event reduction, and (for redistribution policies)
 idle-power reclamation/water-fill — is one call into
 :mod:`repro.kernels.power_step`: the pure-``jnp`` reference by default,
 or the fused Pallas kernel (``use_kernel=True``; interpret-mode on CPU).
+The row's *current* cluster bound is a traced operand of that call, so
+dynamic bound schedules flow straight through the kernel's
+reclamation/water-fill step: each row carries its padded ``(T,)``
+change-time/watt arrays, the wave advancement stops at the next arrival
+exactly like it stops at completions and policy ticks, and the updated
+bound feeds the very next wave's caps.
 
 Numerics: the engine runs in JAX's default float32.  Job completion is
 decided by *time* comparison (``t_fin <= delta``), never by a residual
@@ -22,21 +36,25 @@ differential suite holds the results to the same ``2*dt`` makespan / 1%
 energy envelopes as the numpy backend.
 
 The jitted stepper is a module-level function keyed only on array
-shapes and static policy config, so same-shape batches — every
-(graph, policy) group of a sweep grid — share one compilation.
+shapes and static policy config, so same-shape batches — every bucket
+of a sweep grid — share one compilation; the sweep engine's
+power-of-two padding envelopes make repeated mixed-family sweeps hit
+the same cache.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Dict, List, NamedTuple, Optional, Sequence, Union
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batchsim import GraphArrays, build_graph_arrays
+from repro.core.batchsim import (BatchArrays, GraphArrays,
+                                 build_graph_arrays, pad_bound_schedules,
+                                 stack_graph_arrays, validate_padded_items)
 from repro.core.graph import JobDependencyGraph
 from repro.core.power import NodeSpec
 from repro.core.simulator import OVER_BUDGET_RTOL, SimResult
@@ -50,14 +68,29 @@ _BIG_CUT = BIG_TIME * 0.5
 
 
 class _Ctx(NamedTuple):
-    """Traced per-batch constants (shared across rows, ``in_axes=None``)."""
+    """Traced per-batch geometry.
+
+    In shared mode every leaf describes the one common (graph, cluster)
+    and broadcasts over rows (``in_axes=None``); in stacked mode each
+    leaf carries a leading row axis and is vmapped (``in_axes=0``) —
+    except ``dt``, which is always the shared scalar tick.
+    """
 
     tab: StepTables
-    node_seq: jnp.ndarray   # (N, K) int32
-    deps_pad: jnp.ndarray   # (J+1, D) int32
-    work_pad: jnp.ndarray   # (J+1,)
-    rho_pad: jnp.ndarray    # (J+1,)
-    dt: jnp.ndarray         # scalar
+    node_seq: jnp.ndarray    # (N, K) int32
+    deps_pad: jnp.ndarray    # (J+1, D) int32
+    work_pad: jnp.ndarray    # (J+1,)
+    rho_pad: jnp.ndarray     # (J+1,)
+    completed0: jnp.ndarray  # (J+1,) bool start state (phantoms born done)
+    n_active: jnp.ndarray    # scalar int32: real node count
+    dt: jnp.ndarray          # scalar (shared)
+
+
+#: vmap ``in_axes`` for a stacked (per-row geometry) batch.
+_CTX_ROW_AXES = _Ctx(
+    tab=StepTables(*([0] * len(StepTables._fields))),
+    node_seq=0, deps_pad=0, work_pad=0, rho_pad=0, completed0=0,
+    n_active=0, dt=None)
 
 
 class _RowState(NamedTuple):
@@ -68,7 +101,8 @@ class _RowState(NamedTuple):
     remaining: jnp.ndarray  # (N,)
     completed: jnp.ndarray  # (J+1,) bool, sentinel slot always True
     row_t: jnp.ndarray      # scalar
-    bound: jnp.ndarray      # scalar (constant)
+    bound: jnp.ndarray      # scalar *current* bound (schedules update it)
+    sched_idx: jnp.ndarray  # scalar int32: next bound-schedule entry
     done: jnp.ndarray       # scalar bool
     stalled: jnp.ndarray    # scalar bool (deadlock flag)
     energy: jnp.ndarray     # scalar
@@ -140,23 +174,24 @@ def _settle(ctx: _Ctx, st: _RowState) -> _RowState:
     return jax.lax.while_loop(cond, body, st)
 
 
-def _row_loop(ctx: _Ctx, bound, pol_state, *, policy_name: str,
-              wants_ticks: bool, redistribute: bool, max_steps: int,
-              impl: str, interpret: bool):
+def _row_loop(ctx: _Ctx, bound, sched_t, sched_w, pol_state, *,
+              policy_name: str, wants_ticks: bool, redistribute: bool,
+              max_steps: int, impl: str, interpret: bool):
     cls = _JAX_REGISTRY[policy_name]
     n = ctx.node_seq.shape[0]
-    jp1 = ctx.work_pad.shape[0]
+    t_cols = sched_t.shape[0]
     ftype = ctx.work_pad.dtype
     zero = jnp.zeros((), ftype)
     st0 = _RowState(
         ptr=jnp.zeros(n, jnp.int32), running=jnp.zeros(n, bool),
         remaining=jnp.zeros(n, ftype),
-        completed=jnp.zeros(jp1, bool).at[jp1 - 1].set(True),
+        completed=ctx.completed0,
         row_t=zero, bound=jnp.asarray(bound, ftype),
+        sched_idx=jnp.zeros((), jnp.int32),
         done=jnp.zeros((), bool), stalled=jnp.zeros((), bool),
         energy=zero, peak=zero, over_t=zero, makespan=zero,
-        start_t=jnp.full(jp1, jnp.nan, ftype),
-        end_t=jnp.full(jp1, jnp.nan, ftype),
+        start_t=jnp.full(ctx.work_pad.shape[0], jnp.nan, ftype),
+        end_t=jnp.full(ctx.work_pad.shape[0], jnp.nan, ftype),
         tick_count=jnp.zeros((), jnp.int32), steps=jnp.zeros((), jnp.int32))
     st0 = _settle(ctx, st0)
 
@@ -182,23 +217,37 @@ def _row_loop(ctx: _Ctx, bound, pol_state, *, policy_name: str,
         else:
             next_tick = jnp.asarray(BIG_TIME, ftype)
             t_tick = next_tick
-        delta = jnp.minimum(t_comp, t_tick)
+        # next scheduled cluster-bound arrival (padded with BIG_TIME;
+        # sched_live guards re-reading a consumed final entry)
+        idx_c = jnp.minimum(st.sched_idx, t_cols - 1)
+        sched_live = st.sched_idx < t_cols
+        next_bound_t = sched_t[idx_c]
+        t_bound = jnp.where(sched_live, next_bound_t - st.row_t,
+                            jnp.asarray(BIG_TIME, ftype))
+        delta = jnp.minimum(jnp.minimum(t_comp, t_tick), t_bound)
         # Deadlock is judged on t_comp, not delta: starts depend only on
         # dependency completions, so a row with no running lane can
-        # never recover — even under a tick policy whose t_tick stays
-        # finite forever.
+        # never recover — bound arrivals and policy ticks cannot start
+        # jobs either.
         stalled_now = t_comp >= _BIG_CUT
         delta = jnp.where(stalled_now, 0.0, delta)
+        # over-budget classification uses the bound in effect *during*
+        # the wave; a scheduled change applies from its arrival onwards
         over = p_cluster > st.bound * (1 + OVER_BUDGET_RTOL) + 1e-9
         finishing = st.running & (t_fin <= delta * (1 + 1e-6) + 1e-9)
         row_t = st.row_t + delta
-        due = (t_tick <= t_comp) & ~stalled_now if wants_ticks \
-            else jnp.zeros((), bool)
+        due = (t_tick <= t_comp) & (t_tick <= t_bound) & ~stalled_now \
+            if wants_ticks else jnp.zeros((), bool)
         row_t = jnp.where(due, next_tick, row_t)   # kill the float residue
+        bound_due = sched_live & (t_bound <= t_comp) & (t_bound <= t_tick) \
+            & ~stalled_now
+        row_t = jnp.where(bound_due, next_bound_t, row_t)
         st = st._replace(
             remaining=jnp.where(finishing, 0.0,
                                 st.remaining - rate * delta),
             row_t=row_t,
+            bound=jnp.where(bound_due, sched_w[idx_c], st.bound),
+            sched_idx=st.sched_idx + bound_due.astype(jnp.int32),
             energy=st.energy + p_cluster * delta,
             peak=jnp.maximum(st.peak, p_cluster),
             over_t=st.over_t + jnp.where(over, delta, 0.0),
@@ -224,15 +273,18 @@ def _row_loop(ctx: _Ctx, bound, pol_state, *, policy_name: str,
 @functools.partial(
     jax.jit,
     static_argnames=("policy_name", "wants_ticks", "redistribute",
-                     "max_steps", "impl", "interpret"))
-def _run_batch(ctx: _Ctx, bounds, pol_state, *, policy_name: str,
-               wants_ticks: bool, redistribute: bool, max_steps: int,
-               impl: str, interpret: bool):
+                     "max_steps", "impl", "interpret", "stacked"))
+def _run_batch(ctx: _Ctx, bounds, sched_t, sched_w, pol_state, *,
+               policy_name: str, wants_ticks: bool, redistribute: bool,
+               max_steps: int, impl: str, interpret: bool, stacked: bool):
     row = functools.partial(
         _row_loop, policy_name=policy_name, wants_ticks=wants_ticks,
         redistribute=redistribute, max_steps=max_steps, impl=impl,
         interpret=interpret)
-    return jax.vmap(lambda b, p: row(ctx, b, p))(bounds, pol_state)
+    ctx_axes = _CTX_ROW_AXES if stacked else None
+    return jax.vmap(lambda c, b, t, w, p: row(c, b, t, w, p),
+                    in_axes=(ctx_axes, 0, 0, 0, 0))(
+        ctx, bounds, sched_t, sched_w, pol_state)
 
 
 def _to_device(x):
@@ -248,10 +300,14 @@ def _to_device(x):
 class JaxBatchSimulator:
     """Compiled drop-in for :class:`~repro.core.batchsim.BatchSimulator`.
 
-    Same fixed-structure batch contract — one graph, one cluster, B
-    bounds, one policy — with ``policy`` resolved from the jax-policy
-    registry (:mod:`repro.backends.jax.policy_fns`).  ``use_kernel``
-    routes the per-wave hot path through the fused Pallas kernel;
+    Same two batch layouts — the constructor's fixed-structure batch
+    (one graph, one cluster, B bounds, one policy) and :meth:`padded`'s
+    mixed-shape stacked batch — with ``policy`` resolved from the
+    jax-policy registry (:mod:`repro.backends.jax.policy_fns`).
+    ``bound_schedules`` (one ``(time_s, bound_w)`` iterable per row)
+    makes the rows' cluster bounds time-varying, resolved at exact
+    arrival times inside the compiled loop.  ``use_kernel`` routes the
+    per-wave hot path through the fused Pallas kernel;
     ``kernel_interpret`` defaults to interpret-mode everywhere except a
     real TPU backend.  Power traces are not retained (``trace_every``
     must be ``None``): sweeps that need traces belong on the numpy
@@ -265,18 +321,81 @@ class JaxBatchSimulator:
                  trace_every: Optional[float] = None,
                  max_steps: int = 1_000_000, use_kernel: bool = False,
                  kernel_interpret: Optional[bool] = None,
+                 bound_schedules: Optional[Sequence] = None,
                  **policy_kwargs):
+        graph.topological_order()          # validates the DAG
+        if len(specs) != len(graph.nodes):
+            raise ValueError("one NodeSpec per graph node required")
+        self.graph = graph
+        self.specs = list(specs)
+        self._setup_run_params(bounds, policy, dt, latency_s, trace_every,
+                               max_steps, use_kernel, kernel_interpret,
+                               policy_kwargs, bound_schedules)
+        b = self.n_rows
+        arrays = build_graph_arrays(graph, self.specs)
+        self._init_rows(
+            arrays, stacked=False,
+            row_graphs=[graph] * b, row_specs=[self.specs] * b,
+            row_job_ids=(tuple(arrays.job_ids),) * b,
+            n_jobs_row=np.full(b, arrays.n_jobs),
+            n_active=np.full(b, arrays.n_nodes))
+
+    @classmethod
+    def padded(cls, items: Sequence[Tuple[JobDependencyGraph,
+                                          Sequence[NodeSpec]]],
+               bounds: Sequence[float],
+               policy: Union[str, JaxPolicy] = "equal-share",
+               dt: float = 0.05, latency_s: float = 0.05,
+               trace_every: Optional[float] = None,
+               max_steps: int = 1_000_000, use_kernel: bool = False,
+               kernel_interpret: Optional[bool] = None,
+               bound_schedules: Optional[Sequence] = None,
+               pad_dims: Optional[Tuple[int, int, int, int, int]] = None,
+               **policy_kwargs) -> "JaxBatchSimulator":
+        """Build a mixed-shape compiled batch: row ``b`` runs
+        ``items[b]`` under ``bounds[b]`` (see
+        :meth:`repro.core.batchsim.BatchSimulator.padded` for the
+        padding contract and ``pad_dims``)."""
+        self = cls.__new__(cls)
+        items, bounds = validate_padded_items(items, bounds)
+        self.graph = None
+        self.specs = None
+        self._setup_run_params(bounds, policy, dt, latency_s, trace_every,
+                               max_steps, use_kernel, kernel_interpret,
+                               policy_kwargs, bound_schedules)
+        arrays = stack_graph_arrays(items, pad_dims)
+        self._init_rows(
+            arrays, stacked=True,
+            row_graphs=[g for g, _ in items],
+            row_specs=[list(sp) for _, sp in items],
+            row_job_ids=arrays.row_job_ids,
+            n_jobs_row=arrays.n_jobs_row, n_active=arrays.n_active)
+        return self
+
+    # ------------------------------------------------------- construction
+    def _init_rows(self, arrays, *, stacked, row_graphs, row_specs,
+                   row_job_ids, n_jobs_row, n_active) -> None:
+        """One home for the per-row bookkeeping both layouts must fill
+        (mirrors ``BatchSimulator._init_geometry`` — policies rely on
+        these attributes being layout-agnostic)."""
+        self.arrays = arrays
+        self.stacked = stacked
+        self.row_graphs = row_graphs
+        self.row_specs = row_specs
+        self.row_job_ids = row_job_ids
+        self.n_jobs_row = n_jobs_row
+        self.n_active = n_active
+        self.n_jobs_total = arrays.n_jobs
+
+    def _setup_run_params(self, bounds, policy, dt, latency_s, trace_every,
+                          max_steps, use_kernel, kernel_interpret,
+                          policy_kwargs, bound_schedules) -> None:
         if dt <= 0:
             raise ValueError("dt must be positive")
         if trace_every is not None:
             raise ValueError("the jax backend retains no power traces "
                              "(trace_every must be None); use the vector "
                              "or event backend for traced runs")
-        graph.topological_order()          # validates the DAG
-        if len(specs) != len(graph.nodes):
-            raise ValueError("one NodeSpec per graph node required")
-        self.graph = graph
-        self.specs = list(specs)
         self.bounds = np.asarray(list(bounds), dtype=float)
         if self.bounds.ndim != 1 or len(self.bounds) == 0:
             raise ValueError("bounds must be a non-empty 1-D sequence")
@@ -287,6 +406,7 @@ class JaxBatchSimulator:
         if kernel_interpret is None:
             kernel_interpret = jax.default_backend() != "tpu"
         self.kernel_interpret = bool(kernel_interpret)
+        self._sched = pad_bound_schedules(bound_schedules, len(self.bounds))
         if isinstance(policy, JaxPolicy):
             if policy_kwargs:
                 raise ValueError("policy_kwargs only apply to registry "
@@ -294,7 +414,6 @@ class JaxBatchSimulator:
             self.policy = policy
         else:
             self.policy = get_jax_policy(policy, **policy_kwargs)
-        self.arrays: GraphArrays = build_graph_arrays(graph, self.specs)
 
     @property
     def n_rows(self) -> int:
@@ -308,35 +427,54 @@ class JaxBatchSimulator:
         # numpy leaves throughout: the jitted stepper converts the whole
         # pytree in one dispatch, instead of ~15 eager device_puts here.
         a = self.arrays
+        j = self.n_jobs_total
         ftype = np.dtype(jnp.result_type(float).name)
+        if self.stacked:
+            completed0 = np.zeros((self.n_rows, j + 1), dtype=bool)
+            completed0[:, j] = True
+            completed0[:, :j] |= \
+                np.arange(j)[None, :] >= self.n_jobs_row[:, None]
+            n_active = np.asarray(self.n_active, np.int32)
+        else:
+            completed0 = np.zeros(j + 1, dtype=bool)
+            completed0[j] = True
+            n_active = np.asarray(a.n_nodes, np.int32)
         return _Ctx(tab=step_tables(a.table, ftype),
                     node_seq=np.asarray(a.node_seq, np.int32),
                     deps_pad=np.asarray(a.deps_pad, np.int32),
                     work_pad=np.asarray(a.work_pad, ftype),
                     rho_pad=np.asarray(a.rho_pad, ftype),
+                    completed0=completed0, n_active=n_active,
                     dt=np.asarray(self.dt, ftype))
 
     def run(self) -> List[SimResult]:
         self.policy.prepare(self)
         pol_state = {k: _to_device(v)
                      for k, v in self.policy.init_state(self).items()}
+        if self._sched is not None:
+            sched_t, sched_w = self._sched
+        else:
+            sched_t = np.full((self.n_rows, 1), BIG_TIME)
+            sched_w = np.zeros((self.n_rows, 1))
         out = _run_batch(
-            self._ctx(), _to_device(self.bounds), pol_state,
+            self._ctx(), _to_device(self.bounds), _to_device(sched_t),
+            _to_device(sched_w), pol_state,
             policy_name=self.policy.name,
             wants_ticks=self.policy.wants_ticks,
             redistribute=self.policy.redistribute,
             max_steps=self.max_steps,
             impl="pallas" if self.use_kernel else "ref",
-            interpret=self.kernel_interpret)
+            interpret=self.kernel_interpret,
+            stacked=self.stacked)
         out = {k: np.asarray(v) for k, v in out.items()}
         self._check_failures(out)
         return self._results(out)
 
     def _check_failures(self, out: Dict[str, np.ndarray]) -> None:
-        job_ids = self.arrays.job_ids
         if out["stalled"].any():
             bad = int(np.nonzero(out["stalled"])[0][0])
-            missing = [job_ids[k] for k in range(len(job_ids))
+            jids = self.row_job_ids[bad]
+            missing = [jids[k] for k in range(int(self.n_jobs_row[bad]))
                        if not out["completed"][bad, k]]
             raise RuntimeError(f"deadlock in batch row {bad}: jobs "
                                f"never ran: {sorted(missing)[:8]}")
@@ -346,10 +484,10 @@ class JaxBatchSimulator:
                                f"({self.max_steps}); livelock?")
 
     def _results(self, out: Dict[str, np.ndarray]) -> List[SimResult]:
-        job_ids = self.arrays.job_ids
         name = self.policy.name
         results: List[SimResult] = []
         for row in range(self.n_rows):
+            job_ids = self.row_job_ids[row]
             makespan = float(out["makespan"][row])
             starts = {jid: float(out["start_t"][row, k])
                       for k, jid in enumerate(job_ids)

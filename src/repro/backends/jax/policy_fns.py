@@ -38,9 +38,16 @@ from repro.policies.vector import resolve_assignments
 
 
 def _nominal(ctx, st) -> jnp.ndarray:
-    """The paper's P/n share as a lane vector."""
+    """The paper's P/n share as a lane vector.
+
+    ``n`` is the row's *real* node count (``ctx.n_active``) — in a
+    padded mixed-shape batch the lane axis is wider, but phantom lanes
+    never run, so their nominal cap is inert.  ``st.bound`` is the
+    row's *current* bound, so a scheduled bound change re-splits
+    immediately (the event equal-share's ``on_bound_change``)."""
     n = ctx.node_seq.shape[0]
-    return jnp.full((n,), st.bound / n, dtype=jnp.result_type(st.bound))
+    share = st.bound / ctx.n_active
+    return jnp.broadcast_to(share, (n,)).astype(jnp.result_type(st.bound))
 
 
 class JaxPolicy:
@@ -123,26 +130,26 @@ class JaxIlpStatic(JaxPolicy):
         self.assignments = assignments
         self.time_limit = time_limit
 
-    def _solve(self, sim, bound_w: float):
+    def _solve(self, sim, row: int, bound_w: float):
         from repro.core.ilp import build_makespan_milp, solve_paper_ilp
 
         solver = (build_makespan_milp if self.use_makespan_milp
                   else solve_paper_ilp)
-        return solver(sim.graph, sim.specs, bound_w,
+        return solver(sim.row_graphs[row], sim.row_specs[row], bound_w,
                       time_limit=self.time_limit)
 
     def init_state(self, sim) -> Dict[str, np.ndarray]:
-        arrays = sim.arrays
-        j = arrays.n_jobs
+        j = sim.n_jobs_total
         resolved = resolve_assignments(
             sim.bounds, self.assignments,
-            lambda bound: self._solve(sim, bound))
+            lambda row, bound: self._solve(sim, row, bound),
+            graphs=sim.row_graphs)
         caps_job = np.zeros((sim.n_rows, j + 1))
         for b, assignment in enumerate(resolved):
-            for k, jid in enumerate(arrays.job_ids):
+            for k, jid in enumerate(sim.row_job_ids[b]):
                 caps_job[b, k] = assignment.bounds_w[jid]
             # sentinel slot: exhausted lanes gather the nominal share
-            caps_job[b, j] = sim.bounds[b] / arrays.n_nodes
+            caps_job[b, j] = sim.bounds[b] / sim.n_active[b]
         return {"caps_job": caps_job}
 
     @staticmethod
@@ -197,7 +204,8 @@ class JaxOnlineHeuristic(JaxPolicy):
     def init_state(self, sim) -> Dict[str, np.ndarray]:
         delay = max(1, int(round(2.0 * sim.latency_s / sim.dt)))
         b, n = sim.n_rows, sim.arrays.n_nodes
-        nominal = np.asarray(sim.bounds)[:, None] / n
+        nominal = np.asarray(sim.bounds)[:, None] / \
+            np.asarray(sim.n_active)[:, None]
         return {
             "buf": np.zeros((b, delay + 1, n)),
             "cap": np.repeat(nominal, n, axis=1),

@@ -10,13 +10,19 @@ Layers:
                    policies live in repro.policies (string-keyed registry)
   batchsim       — vectorized batch simulator: B scenarios x N nodes as
                    arrays (SweepEngine's executor="vector" backend)
-  sweep          — batched (graph, bound, policy) scenario engine
-  workloads      — Listing-2 example, NPB analogues, pipeline/MoE graphs
+  sweep          — batched (graph, bound, policy) scenario engine with
+                   padded mixed-shape bucketing
+  scenarios      — seeded ScenarioFamily generators (mixed shapes,
+                   relative bounds, dynamic bound steps)
+  workloads      — Listing-2 example, NPB analogues, random layered /
+                   fork-join generators, pipeline/MoE graphs
   hlo_extract    — job graphs from compiled JAX/XLA steps (§VII-A1 analogue)
   roofline       — three-term roofline from dry-run artifacts
 """
 
-from .batchsim import BatchSimulator, simulate_batch
+from .batchsim import (BatchArrays, BatchSimulator, GraphArrays,
+                       build_graph_arrays, simulate_batch,
+                       stack_graph_arrays)
 from .block_detector import (DistributeMessage, NodeState, ReportManager,
                              ReportMessage, blocked_report, running_report)
 from .graph import Job, JobDependencyGraph, JobId
@@ -29,11 +35,14 @@ from .power import (NodeSpec, PowerLUT, PowerState, arndale_like_lut,
                     max_useful_cluster_bound, min_feasible_cluster_bound,
                     nominal_bound, odroid_like_lut, progress_rate,
                     tpu_v5e_lut)
+from .scenarios import (FamilyMember, ScenarioFamily, lm_family,
+                        mixed_family, npb_family, random_layered_family)
 from .simulator import SimResult, Simulator, simulate
 from .sweep import (MapRecord, Scenario, SweepEngine, SweepRecord,
                     SweepResult, compare_policies, scenario_grid)
 from .workloads import (LISTING2_TIMES, TraceBuilder, cg_like, ep_like,
-                        is_like, listing2_graph, listing2_random,
-                        listing2_uniform, moe_step_graph, pipeline_graph)
+                        fork_join_graph, is_like, layered_dag,
+                        listing2_graph, listing2_random, listing2_uniform,
+                        moe_step_graph, pipeline_graph)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

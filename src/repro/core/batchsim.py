@@ -3,43 +3,76 @@
 The discrete-event :class:`~repro.core.simulator.Simulator` walks one
 scenario's event heap in pure Python; a sweep of thousands of (graph,
 bound, policy) cells is bounded by interpreter speed.  This backend
-advances a whole *batch* of scenarios — same graph and cluster, varying
-cluster bound — simultaneously: per-node state lives in ``(B, N)``
-arrays (current-job pointer, remaining work, running mask, cap), job
-bookkeeping in ``(B, J)`` arrays, and the power-to-frequency translation
-is one batched LUT gather (:func:`repro.core.power.batched_operating_point`).
-Every step is plain gather/compare/where arithmetic, so the inner loop is
-JAX-jittable by construction (swap ``np`` for ``jnp``); the numpy form
-already moves the per-cell cost from a Python event loop to a handful of
-vector ops.
+advances a whole *batch* of scenarios simultaneously: per-node state
+lives in ``(B, N)`` arrays (current-job pointer, remaining work, running
+mask, cap), job bookkeeping in ``(B, J)`` arrays, and the
+power-to-frequency translation is one batched LUT gather
+(:func:`repro.core.power.batched_operating_point`).  Every step is plain
+gather/compare/where arithmetic, so the inner loop is JAX-jittable by
+construction (swap ``np`` for ``jnp``); the numpy form already moves the
+per-cell cost from a Python event loop to a handful of vector ops.
+
+Two batch layouts share the same wave loop:
+
+* **shared** (:class:`BatchSimulator` constructor) — one graph, one
+  cluster, B cluster bounds.  The static geometry is built once
+  (:class:`GraphArrays`) and broadcast (zero-copy) over the rows.
+* **padded** (:meth:`BatchSimulator.padded`) — B *different* (graph,
+  cluster) rows stacked into one ``(B, ...)`` geometry
+  (:class:`BatchArrays`) padded to a common (N, J) envelope.  Padding is
+  masked: phantom job slots carry zero work and are born completed,
+  phantom node lanes point at the sentinel job and draw **zero** idle
+  power (see :func:`repro.core.power.stack_lut_tables`), so a padded
+  row's physics — makespan, energy, peak, over-budget time — is
+  bit-identical to running it unpadded.
 
 Time advances in *waves*, not fixed quanta: each iteration every active
 row jumps to its own earliest next event — the minimum over its lanes'
-job-completion times, capped at the next policy tick boundary (multiples
-of ``dt``, only for policies with ``wants_ticks``).  Rates are piecewise
-constant between waves, so completions, dependency hand-offs, energy
-integration, peak power, and over-budget time are all resolved at exact
-event times: for policies whose cap decisions depend only on state
+job-completion times, the next policy tick boundary (multiples of
+``dt``, only for policies with ``wants_ticks``), and the row's next
+scheduled cluster-bound change (``bound_schedules``).  Rates are
+piecewise constant between waves, so completions, dependency hand-offs,
+energy integration, peak power, and over-budget time are all resolved at
+exact event times: for policies whose cap decisions depend only on state
 transitions (equal-share, ilp, oracle) the backend reproduces the event
 simulator bit-for-bit up to float accumulation order, and ``dt`` matters
 only for tick-quantized control planes (the vectorized heuristic).
 
 Entry points: :class:`BatchSimulator` for one batch,
 :func:`simulate_batch` as the one-call facade, and
-``SweepEngine(executor="vector")`` for automatic batching of same-shape
+``SweepEngine(executor="vector")`` for automatic (bucketed) batching of
 scenarios inside a sweep grid.
+
+Example — two bounds on the paper's Listing-2 graph::
+
+    >>> from repro.core import listing2_graph, homogeneous_cluster
+    >>> from repro.core.batchsim import simulate_batch
+    >>> rs = simulate_batch(listing2_graph(), homogeneous_cluster(3),
+    ...                     bounds=[6.0, 12.0])
+    >>> [round(r.makespan, 3) for r in rs]
+    [38.0, 25.333]
+
+and a mixed-shape padded batch with a per-row bound schedule::
+
+    >>> from repro.core.batchsim import BatchSimulator
+    >>> g3, g3u = listing2_graph(), listing2_graph({(2, 5): 20.0})
+    >>> sim = BatchSimulator.padded(
+    ...     [(g3, homogeneous_cluster(3)), (g3u, homogeneous_cluster(3))],
+    ...     bounds=[6.0, 6.0], bound_schedules=[(), ((5.0, 12.0),)])
+    >>> [r.makespan > 0 for r in sim.run()]
+    [True, True]
 """
 
 from __future__ import annotations
 
 import math
-from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import (List, NamedTuple, Optional, Sequence, Tuple, Union)
 
 import numpy as np
 
 from .graph import JobDependencyGraph, JobId
 from .power import (LUTTable, NodeSpec, batched_operating_point,
-                    batched_rates, lut_table)
+                    batched_rates, lut_table, stack_lut_tables)
 from .simulator import OVER_BUDGET_RTOL, SimResult
 
 #: Remaining-work threshold below which a job counts as complete.  Wave
@@ -47,6 +80,11 @@ from .simulator import OVER_BUDGET_RTOL, SimResult
 #: earliest lane, so residues are pure float noise (~1e-13 at class-C
 #: work scales), far under this.
 _DONE_EPS = 1e-9
+
+#: Finite stand-in for "no further scheduled event" used to pad
+#: ``bound_schedules`` rows (mirrors the jax kernel's BIG_TIME; finite
+#: so the same padded arrays feed both backends).
+BIG_EVENT_TIME = 1e30
 
 
 class GraphArrays(NamedTuple):
@@ -68,10 +106,12 @@ class GraphArrays(NamedTuple):
 
     @property
     def n_jobs(self) -> int:
+        """Real job count J (the sentinel slot is not counted)."""
         return len(self.job_ids)
 
     @property
     def n_nodes(self) -> int:
+        """Node count N (= lane count; no padding in this layout)."""
         return self.node_seq.shape[0]
 
 
@@ -105,18 +145,183 @@ def build_graph_arrays(graph: JobDependencyGraph,
                        deps_pad=deps_pad, table=lut_table(specs))
 
 
+class BatchArrays(NamedTuple):
+    """Per-row stacked geometry for a mixed-shape (padded) batch.
+
+    Shapes: ``B`` rows, each padded to ``N`` node lanes, ``J`` job slots
+    (plus the per-row sentinel slot ``J``), ``K`` per-lane sequence
+    length, ``D`` dependency fan-in, ``S`` LUT states.  Conventions:
+
+    * job slots ``n_jobs_row[b] <= k < J`` of row ``b`` are *phantom*:
+      zero work, no lane ever points at them, and the simulator marks
+      them completed before the first wave;
+    * node lanes ``n_active[b] <= i < N`` are *phantom*: their whole
+      ``node_seq`` row is the sentinel ``J`` (instantly exhausted) and
+      their table columns hold the zero-power phantom values of
+      :func:`repro.core.power.stack_lut_tables` — a phantom lane never
+      runs, never draws idle power, and never attracts water-filled
+      budget.
+    """
+
+    row_job_ids: Tuple[Tuple[JobId, ...], ...]  # per-row sorted job ids
+    n_jobs_row: np.ndarray       # (B,) real job count per row
+    n_active: np.ndarray         # (B,) real node count per row
+    work_pad: np.ndarray         # (B, J+1)
+    rho_pad: np.ndarray          # (B, J+1)
+    node_seq: np.ndarray         # (B, N, K)
+    deps_pad: np.ndarray         # (B, J+1, D)
+    table: LUTTable              # (B, N, S)/(B, N) leaves
+
+    @property
+    def n_jobs(self) -> int:
+        """Padded job-slot count J (>= every row's real job count)."""
+        return self.work_pad.shape[1] - 1
+
+    @property
+    def n_nodes(self) -> int:
+        """Padded lane count N (>= every row's real node count)."""
+        return self.node_seq.shape[1]
+
+
+def stack_graph_arrays(items: Sequence[Tuple[JobDependencyGraph,
+                                             Sequence[NodeSpec]]],
+                       pad_dims: Optional[Tuple[int, int, int, int, int]]
+                       = None) -> BatchArrays:
+    """Stack per-row (graph, specs) pairs into one :class:`BatchArrays`.
+
+    ``pad_dims`` is the ``(N, J, K, D, S)`` padding envelope (``K``
+    counts the full ``node_seq`` second axis, i.e. max jobs per lane
+    + 1); when omitted, the tight maxima over the rows are used.  The
+    sweep engine passes power-of-two envelopes so repeated sweeps of
+    similar families reuse the compiled jax stepper across buckets.
+    """
+    if not items:
+        raise ValueError("padded batch needs at least one (graph, specs)")
+    cache: dict = {}
+    gas: List[GraphArrays] = []
+    for graph, specs in items:
+        key = (id(graph), tuple(id(sp) for sp in specs))
+        ga = cache.get(key)
+        if ga is None:
+            ga = cache[key] = build_graph_arrays(graph, specs)
+        gas.append(ga)
+    need = (max(ga.n_nodes for ga in gas),
+            max(ga.n_jobs for ga in gas),
+            max(ga.node_seq.shape[1] for ga in gas),
+            max(ga.deps_pad.shape[1] for ga in gas),
+            max(ga.table.state_p.shape[1] for ga in gas))
+    if pad_dims is None:
+        pad_dims = need
+    if any(p < m for p, m in zip(pad_dims, need)):
+        raise ValueError(f"pad_dims {pad_dims} smaller than row "
+                         f"maxima {need}")
+    n, j, k, d, s = pad_dims
+    b = len(gas)
+    work = np.zeros((b, j + 1))
+    rho = np.ones((b, j + 1))
+    node_seq = np.full((b, n, k), j, dtype=np.int64)
+    deps = np.full((b, j + 1, d), j, dtype=np.int64)
+    for r, ga in enumerate(gas):
+        jb = ga.n_jobs
+        work[r, :jb] = ga.work_pad[:jb]
+        rho[r, :jb] = ga.rho_pad[:jb]
+        # remap the row's own sentinel (jb) to the padded sentinel (j)
+        ns = np.where(ga.node_seq == jb, j, ga.node_seq)
+        node_seq[r, :ga.n_nodes, :ns.shape[1]] = ns
+        dp = np.where(ga.deps_pad == jb, j, ga.deps_pad)
+        deps[r, :jb, :dp.shape[1]] = dp[:jb]
+    table = stack_lut_tables([ga.table for ga in gas], n, s)
+    return BatchArrays(
+        row_job_ids=tuple(ga.job_ids for ga in gas),
+        n_jobs_row=np.array([ga.n_jobs for ga in gas]),
+        n_active=np.array([ga.n_nodes for ga in gas]),
+        work_pad=work, rho_pad=rho, node_seq=node_seq, deps_pad=deps,
+        table=table)
+
+
+def validate_padded_items(items, bounds) -> Tuple[list, list]:
+    """Validate a padded batch's per-row inputs (shared by the numpy and
+    jax simulators so their contracts cannot drift): every graph is a
+    valid DAG with one NodeSpec per node, and there is exactly one bound
+    per row.  Returns ``(items, bounds)`` as lists."""
+    items = list(items)
+    bounds = list(bounds)
+    for graph, specs in items:
+        graph.topological_order()          # validates each DAG
+        if len(specs) != len(graph.nodes):
+            raise ValueError("one NodeSpec per graph node required")
+    if len(bounds) != len(items):
+        raise ValueError(f"padded batch needs one bound per row: got "
+                         f"{len(bounds)} bounds for {len(items)} rows")
+    return items, bounds
+
+
+def pad_bound_schedules(
+        schedules: Optional[Sequence[Sequence[Tuple[float, float]]]],
+        n_rows: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Normalize per-row bound schedules into padded ``(B, T)`` arrays.
+
+    Returns ``(sched_t, sched_w)`` — per-row change times (sorted,
+    padded with :data:`BIG_EVENT_TIME`) and the bound in watts that
+    takes effect at each — or ``None`` when every row's schedule is
+    empty (the fast path: the wave loop then skips bound-event logic
+    entirely).  Times must be non-negative (a past arrival would run a
+    wave backwards); the sort is *stable*, so same-time arrivals apply
+    in their given order, matching the event simulator's heap.
+    """
+    if schedules is None:
+        return None
+    if len(schedules) != n_rows:
+        raise ValueError(f"got {len(schedules)} bound schedules for "
+                         f"{n_rows} batch rows")
+    if all(not s for s in schedules):
+        return None
+    t_max = max(len(s) for s in schedules)
+    sched_t = np.full((n_rows, t_max), BIG_EVENT_TIME)
+    sched_w = np.zeros((n_rows, t_max))
+    for r, entries in enumerate(schedules):
+        entries = [(float(t), float(w)) for t, w in entries]
+        if any(t < 0 for t, _ in entries):
+            raise ValueError(f"bound-schedule times must be >= 0 "
+                             f"(row {r}: {entries})")
+        entries.sort(key=lambda e: e[0])
+        for i, (t, w) in enumerate(entries):
+            sched_t[r, i] = t
+            sched_w[r, i] = w
+    return sched_t, sched_w
+
+
 class BatchSimulator:
-    """Fixed-structure batch: one graph, one cluster, B bounds, one policy.
+    """One batch: B scenario rows advanced in lock-step waves.
+
+    The plain constructor is the *shared* layout — one graph, one
+    cluster, one policy, B cluster bounds; :meth:`padded` is the
+    *mixed-shape* layout — B (graph, cluster) rows padded to a common
+    envelope (see the module docstring for the masking semantics).
 
     ``policy`` is a vector-registry key or a pre-built
     :class:`~repro.policies.vector.VectorPolicy`.  ``dt`` is the control
     tick for ``wants_ticks`` policies (pure event-driven policies ignore
-    it).  ``trace_every`` has the event simulator's semantics — ``None``
-    retains no per-row power trace, ``0.0`` records every segment, a
-    positive value records at most one sample per that many simulated
-    seconds — but the *default* is ``None``, not the event simulator's
-    ``0.0``: this backend exists for big sweeps, where retained traces
-    are the memory hazard ``trace_every`` was invented to cap.
+    it).  ``bound_schedules`` is one iterable of ``(time_s, bound_w)``
+    arrivals per row (or ``None``): each arrival replaces the row's
+    cluster bound at exactly that simulated time and fires the policy's
+    ``on_bound_change`` hook — the batched form of the event simulator's
+    ``bound_schedule``.  ``trace_every`` has the event simulator's
+    semantics — ``None`` retains no per-row power trace, ``0.0`` records
+    every segment, a positive value records at most one sample per that
+    many simulated seconds — but the *default* is ``None``, not the
+    event simulator's ``0.0``: this backend exists for big sweeps, where
+    retained traces are the memory hazard ``trace_every`` was invented
+    to cap.
+
+    Public attributes a :class:`~repro.policies.vector.VectorPolicy`
+    may rely on: ``bounds`` (the rows' *current* cluster bounds —
+    mutated by bound-schedule arrivals), ``cap`` (the live ``(B, N)``
+    cap matrix), ``running``/``completed``/``row_t`` state arrays,
+    ``idle_w`` (``(B, N)`` idle draw, zero on phantom lanes),
+    ``n_active`` (``(B,)`` real node counts), ``row_graphs`` /
+    ``row_specs`` / ``row_job_ids`` (per-row workload descriptions), and
+    ``table`` / ``dt`` / ``latency_s``.
     """
 
     def __init__(self, graph: JobDependencyGraph, specs: Sequence[NodeSpec],
@@ -124,36 +329,116 @@ class BatchSimulator:
                  policy: Union[str, "VectorPolicy"] = "equal-share",
                  dt: float = 0.05, latency_s: float = 0.05,
                  trace_every: Optional[float] = None,
-                 max_steps: int = 1_000_000, **policy_kwargs):
-        if dt <= 0:
-            raise ValueError("dt must be positive")
+                 max_steps: int = 1_000_000,
+                 bound_schedules: Optional[Sequence] = None,
+                 **policy_kwargs):
         graph.topological_order()          # validates the DAG
         self.graph = graph
         self.node_ids = graph.nodes
-        n = len(self.node_ids)
-        if len(specs) != n:
+        if len(specs) != len(self.node_ids):
             raise ValueError("one NodeSpec per graph node required")
         self.specs = list(specs)
-        self.bounds = np.asarray(list(bounds), dtype=float)
-        if self.bounds.ndim != 1 or len(self.bounds) == 0:
+        b = self._setup_run_params(bounds, policy, dt, latency_s,
+                                   trace_every, max_steps, policy_kwargs,
+                                   bound_schedules)
+
+        # ---- static graph arrays, broadcast (zero-copy) over the rows
+        arrays = build_graph_arrays(graph, self.specs)
+        self.arrays = arrays
+        self.job_ids = list(arrays.job_ids)
+        j1, (n, k) = len(arrays.work_pad), arrays.node_seq.shape
+        self._init_geometry(
+            work_pad=np.broadcast_to(arrays.work_pad, (b, j1)),
+            rho_pad=np.broadcast_to(arrays.rho_pad, (b, j1)),
+            node_seq=np.broadcast_to(arrays.node_seq, (b, n, k)),
+            deps_pad=np.broadcast_to(arrays.deps_pad,
+                                     (b,) + arrays.deps_pad.shape),
+            table=arrays.table,
+            row_job_ids=(tuple(arrays.job_ids),) * b,
+            n_jobs_row=np.full(b, arrays.n_jobs),
+            n_active=np.full(b, n),
+            row_graphs=[graph] * b,
+            row_specs=[self.specs] * b)
+
+    @classmethod
+    def padded(cls, items: Sequence[Tuple[JobDependencyGraph,
+                                          Sequence[NodeSpec]]],
+               bounds: Sequence[float],
+               policy: Union[str, "VectorPolicy"] = "equal-share",
+               dt: float = 0.05, latency_s: float = 0.05,
+               trace_every: Optional[float] = None,
+               max_steps: int = 1_000_000,
+               bound_schedules: Optional[Sequence] = None,
+               pad_dims: Optional[Tuple[int, int, int, int, int]] = None,
+               **policy_kwargs) -> "BatchSimulator":
+        """Build a mixed-shape batch: row ``b`` runs ``items[b]`` under
+        ``bounds[b]`` (one (graph, specs) pair and one bound per row).
+
+        ``pad_dims`` optionally fixes the ``(N, J, K, D, S)`` padding
+        envelope (e.g. the sweep engine's power-of-two buckets); by
+        default the rows' tight maxima are used.
+        """
+        self = cls.__new__(cls)
+        items, bounds = validate_padded_items(items, bounds)
+        self.graph = None                  # no single shared graph
+        self.node_ids = None
+        self.specs = None
+        self.job_ids = None
+        self._setup_run_params(bounds, policy, dt, latency_s, trace_every,
+                               max_steps, policy_kwargs, bound_schedules)
+        arrays = stack_graph_arrays(items, pad_dims)
+        self.arrays = arrays
+        self._init_geometry(
+            work_pad=arrays.work_pad, rho_pad=arrays.rho_pad,
+            node_seq=arrays.node_seq, deps_pad=arrays.deps_pad,
+            table=arrays.table, row_job_ids=arrays.row_job_ids,
+            n_jobs_row=arrays.n_jobs_row, n_active=arrays.n_active,
+            row_graphs=[g for g, _ in items],
+            row_specs=[list(sp) for _, sp in items])
+        return self
+
+    # ------------------------------------------------------- construction
+    def _setup_run_params(self, bounds, policy, dt, latency_s, trace_every,
+                          max_steps, policy_kwargs, bound_schedules) -> int:
+        if dt <= 0:
+            raise ValueError("dt must be positive")
+        self._bounds0 = np.asarray(list(bounds), dtype=float)
+        if self._bounds0.ndim != 1 or len(self._bounds0) == 0:
             raise ValueError("bounds must be a non-empty 1-D sequence")
+        #: The rows' *current* cluster bounds; reset from the initial
+        #: bounds at the top of :meth:`run` and mutated by
+        #: bound-schedule arrivals.
+        self.bounds = self._bounds0.copy()
         self.dt = float(dt)
         self.latency_s = float(latency_s)
         self.max_steps = max_steps
         self._trace_every = trace_every
+        self._sched = pad_bound_schedules(bound_schedules,
+                                          len(self._bounds0))
         self.policy = self._resolve_policy(policy, policy_kwargs)
+        return len(self._bounds0)
 
-        # ---- static graph arrays (shared across the batch) ----
-        arrays = build_graph_arrays(graph, self.specs)
-        self.arrays = arrays
-        self.job_ids = list(arrays.job_ids)
-        self.n_jobs_total = arrays.n_jobs
-        self.work_pad = arrays.work_pad
-        self.rho_pad = arrays.rho_pad
-        self.node_seq = arrays.node_seq
-        self.deps_pad = arrays.deps_pad
-        self.table: LUTTable = arrays.table
+    def _init_geometry(self, *, work_pad, rho_pad, node_seq, deps_pad,
+                       table, row_job_ids, n_jobs_row, n_active,
+                       row_graphs, row_specs) -> None:
+        b, n = node_seq.shape[:2]
+        self.work_pad = work_pad          # (B, J+1)
+        self.rho_pad = rho_pad            # (B, J+1)
+        self.node_seq = node_seq          # (B, N, K)
+        self.deps_pad = deps_pad          # (B, J+1, D)
+        self.table: LUTTable = table
+        self.row_job_ids = row_job_ids
+        self.n_jobs_row = n_jobs_row
+        self.n_active = n_active
+        self.row_graphs = row_graphs
+        self.row_specs = row_specs
+        self.n_jobs_total = work_pad.shape[1] - 1
+        self._n = n
         self._nidx = np.arange(n)
+        self._bidx = np.arange(b)
+        #: (B, N) idle draw per lane (zero on phantom lanes) — the form
+        #: policies should use for reclamation sums.
+        self.idle_w = np.broadcast_to(self.table.idle_w, (b, n))
 
     @staticmethod
     def _resolve_policy(policy, kwargs):
@@ -168,16 +453,21 @@ class BatchSimulator:
     # ------------------------------------------------------------ geometry
     @property
     def n_rows(self) -> int:
-        return len(self.bounds)
+        """Batch size B (scenario rows)."""
+        return len(self._bounds0)
 
     @property
     def n_nodes(self) -> int:
-        return len(self.node_ids)
+        """Node lanes per row (the padded envelope ``N``; per-row real
+        node counts are :attr:`n_active`)."""
+        return self._n
 
     # ------------------------------------------------------------ stepping
     def _cur(self) -> np.ndarray:
-        """Flat index of each lane's current job (sentinel J if exhausted)."""
-        return self.node_seq[self._nidx[None, :], self.ptr]
+        """(B, N) flat index of each lane's current job (sentinel J if
+        exhausted — phantom lanes sit there from the first wave)."""
+        return self.node_seq[self._bidx[:, None], self._nidx[None, :],
+                             self.ptr]
 
     def _settle(self, before: Optional[np.ndarray] = None) -> None:
         """Resolve everything that happens at the rows' current instants:
@@ -187,13 +477,14 @@ class BatchSimulator:
         when given — to the policy, mirroring the event simulator's
         report semantics: a node finishing one job and immediately
         starting the next emits no report."""
-        b_rows = np.arange(self.n_rows)
+        b_rows = self._bidx
         if before is None:
             before = self.running.copy()
         while True:
             cur = self._cur()
+            deps = self.deps_pad[b_rows[:, None], cur]      # (B, N, D)
             deps_ok = self.completed[b_rows[:, None, None],
-                                     self.deps_pad[cur]].all(axis=-1)
+                                     deps].all(axis=-1)
             ready = (~self.running) & (cur < self.n_jobs_total) & deps_ok \
                 & ~self.row_done[:, None]
             changed = False
@@ -201,7 +492,7 @@ class BatchSimulator:
                 rows, lanes = np.nonzero(ready)
                 jobs = cur[ready]
                 self.running[ready] = True
-                self.remaining[ready] = self.work_pad[jobs]
+                self.remaining[ready] = self.work_pad[rows, jobs]
                 self.start_t[rows, jobs] = self.row_t[rows]
                 self.policy.on_job_start(self, rows, lanes, jobs)
                 changed = True
@@ -241,9 +532,15 @@ class BatchSimulator:
                 tr.append((t, p))
 
     def run(self) -> List[SimResult]:
+        """Advance every row to completion; one :class:`SimResult` per
+        row, in row order."""
         b, n, j = self.n_rows, self.n_nodes, self.n_jobs_total
+        self.bounds = self._bounds0.copy()
         self.completed = np.zeros((b, j + 1), dtype=bool)
         self.completed[:, j] = True
+        # phantom job slots of short rows are born completed
+        self.completed[:, :j] |= \
+            np.arange(j)[None, :] >= self.n_jobs_row[:, None]
         self.ptr = np.zeros((b, n), dtype=np.int64)
         self.running = np.zeros((b, n), dtype=bool)
         self.remaining = np.zeros((b, n))
@@ -265,6 +562,10 @@ class BatchSimulator:
         # exactly (count + 1) * dt and row_t snaps onto it when a tick
         # wins the wave, so no epsilon comparison can strand a row.
         tick_count = np.zeros(b, dtype=np.int64)
+        if self._sched is not None:
+            sched_t, sched_w = self._sched
+            t_cols = sched_t.shape[1]
+            sched_idx = np.zeros(b, dtype=np.int64)
 
         self._settle()
         steps = 0
@@ -275,11 +576,10 @@ class BatchSimulator:
                                    f"({self.max_steps}); livelock?")
             freq, duty, op_power = batched_operating_point(self.table,
                                                            self.cap)
-            rho = self.rho_pad[self._cur()]
+            rho = self.rho_pad[self._bidx[:, None], self._cur()]
             rate = np.where(self.running,
                             batched_rates(self.table, freq, duty, rho), 0.0)
-            p_node = np.where(self.running, op_power,
-                              self.table.idle_w[None, :])
+            p_node = np.where(self.running, op_power, self.idle_w)
             p_cluster = p_node.sum(axis=1)
             active = ~self.row_done
             if self._trace_every is not None:
@@ -291,19 +591,31 @@ class BatchSimulator:
             next_tick = (tick_count + 1) * self.dt if ticks \
                 else np.full(b, np.inf)
             t_tick = next_tick - self.row_t
-            step = np.minimum(t_comp, t_tick)
+            if self._sched is not None:
+                idx_c = np.minimum(sched_idx, t_cols - 1)
+                next_bound_t = sched_t[self._bidx, idx_c]
+                sched_live = sched_idx < t_cols
+                t_bound = np.where(sched_live,
+                                   next_bound_t - self.row_t, np.inf)
+            else:
+                t_bound = np.full(b, np.inf)
+            step = np.minimum(np.minimum(t_comp, t_tick), t_bound)
             # Deadlock is judged on t_comp, not step: starts depend only
             # on dependency completions, so a row with no running lane
             # can never recover — even under a tick policy whose t_tick
             # stays finite forever (which would otherwise spin here for
-            # max_steps waves).
+            # max_steps waves).  Bound arrivals cannot start jobs either.
             if np.any(active & ~np.isfinite(t_comp)):
                 bad = int(np.nonzero(active & ~np.isfinite(t_comp))[0][0])
-                missing = [self.job_ids[k] for k in range(j)
+                jids = self.row_job_ids[bad]
+                missing = [jids[k] for k in range(int(self.n_jobs_row[bad]))
                            if not self.completed[bad, k]]
                 raise RuntimeError(f"deadlock in batch row {bad}: jobs "
                                    f"never ran: {sorted(missing)[:8]}")
             delta = np.where(active, step, 0.0)
+            # Over-budget time is classified against the bound in effect
+            # *during* the wave (a scheduled change applies from its
+            # arrival instant onwards, exactly like the event heap).
             self.energy += p_cluster * delta
             self.peak = np.where(active, np.maximum(self.peak, p_cluster),
                                  self.peak)
@@ -314,22 +626,31 @@ class BatchSimulator:
             self.row_t += delta
 
             if ticks:
-                due = active & (t_tick <= t_comp)
+                due = active & (t_tick <= t_comp) & (t_tick <= t_bound)
                 self.row_t[due] = next_tick[due]   # kill the float residue
             before = self.running.copy()
             finished = self.running & (self.remaining <= _DONE_EPS) \
                 & active[:, None]
             if finished.any():
                 self._complete(finished)
+            if self._sched is not None:
+                b_due = active & sched_live & (t_bound <= t_comp) \
+                    & (t_bound <= t_tick)
+                if b_due.any():
+                    self.row_t[b_due] = next_bound_t[b_due]
+                    self.bounds[b_due] = sched_w[self._bidx, idx_c][b_due]
+                    sched_idx[b_due] += 1
+                    self.policy.on_bound_change(self, b_due)
             if ticks and due.any():
                 self.policy.on_tick(self, due)
                 tick_count[due] += 1
             self._settle(before)
         if self._trace_every is not None:
-            idle_total = float(self.table.idle_w.sum())
-            for tr, m in zip(self._traces, self.makespan):
+            idle_total = self.idle_w.sum(axis=1)
+            for b_row, (tr, m) in enumerate(zip(self._traces,
+                                                self.makespan)):
                 if not tr or tr[-1][0] < float(m):
-                    tr.append((float(m), idle_total))
+                    tr.append((float(m), float(idle_total[b_row])))
         return self._results()
 
     # -------------------------------------------------------------- output
@@ -338,11 +659,12 @@ class BatchSimulator:
         out: List[SimResult] = []
         for row in range(self.n_rows):
             makespan = float(self.makespan[row])
+            jids = self.row_job_ids[row]
             starts = {jid: float(self.start_t[row, k])
-                      for k, jid in enumerate(self.job_ids)
+                      for k, jid in enumerate(jids)
                       if not math.isnan(self.start_t[row, k])}
             ends = {jid: float(self.end_t[row, k])
-                    for k, jid in enumerate(self.job_ids)
+                    for k, jid in enumerate(jids)
                     if not math.isnan(self.end_t[row, k])}
             energy = float(self.energy[row])
             out.append(SimResult(
@@ -361,8 +683,10 @@ def simulate_batch(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
                    policy: Union[str, "VectorPolicy"] = "equal-share",
                    dt: float = 0.05, latency_s: float = 0.05,
                    trace_every: Optional[float] = None,
+                   bound_schedules: Optional[Sequence] = None,
                    **policy_kwargs) -> List[SimResult]:
     """One-call facade: one :class:`SimResult` per entry of ``bounds``."""
     return BatchSimulator(graph, specs, bounds, policy=policy, dt=dt,
                           latency_s=latency_s, trace_every=trace_every,
+                          bound_schedules=bound_schedules,
                           **policy_kwargs).run()

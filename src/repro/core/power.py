@@ -287,22 +287,28 @@ def batched_operating_point(table: LUTTable, caps_w: np.ndarray
                             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized :func:`operating_point`: caps ``(B, N)`` -> (freq, duty,
     power), each ``(B, N)``.  Elementwise-identical to the scalar
-    translator, including the sub-``p_min`` duty states."""
-    fits = table.state_p[None, :, :] <= caps_w[..., None] + 1e-12
+    translator, including the sub-``p_min`` duty states.
+
+    ``table`` may hold a single cluster (``(N, S)`` state tables, the
+    :func:`lut_table` layout, shared by every batch row) or one cluster
+    *per row* (``(B, N, S)`` tables from :func:`stack_lut_tables`, the
+    padded-bucket layout); both broadcast against the ``(B, N)`` caps.
+    """
+    fits = table.state_p <= caps_w[..., None] + 1e-12
     idx = fits.sum(axis=-1) - 1            # highest fitting state, -1 if none
     has_state = idx >= 0
     idx_c = np.maximum(idx, 0)[..., None]
-    shape = caps_w.shape + (table.state_p.shape[1],)
+    shape = caps_w.shape + (table.state_p.shape[-1],)
     freq_fit = np.take_along_axis(
-        np.broadcast_to(table.state_f[None, :, :], shape), idx_c, -1)[..., 0]
+        np.broadcast_to(table.state_f, shape), idx_c, -1)[..., 0]
     power_fit = np.take_along_axis(
-        np.broadcast_to(table.state_p[None, :, :], shape), idx_c, -1)[..., 0]
-    q = (caps_w - table.idle_w[None, :]) / table.span[None, :]
+        np.broadcast_to(table.state_p, shape), idx_c, -1)[..., 0]
+    q = (caps_w - table.idle_w) / table.span
     q = np.clip(q, DUTY_FLOOR, 1.0)
-    freq = np.where(has_state, freq_fit, table.f_min[None, :])
+    freq = np.where(has_state, freq_fit, np.broadcast_to(table.f_min,
+                                                         caps_w.shape))
     duty = np.where(has_state, 1.0, q)
-    power = np.where(has_state, power_fit,
-                     table.idle_w[None, :] + q * table.span[None, :])
+    power = np.where(has_state, power_fit, table.idle_w + q * table.span)
     return freq, duty, power
 
 
@@ -311,9 +317,55 @@ def batched_rates(table: LUTTable, freq: np.ndarray, duty: np.ndarray,
     """Vectorized :func:`op_rate` for unit-independent progress: work-units
     per second for a job with ``cpu_frac`` at (freq, duty) — independent of
     the job's size, exactly ``op_rate(job, op, f_nom, speed) / job.work``
-    times ``job.work``."""
-    slowdown = cpu_frac * (table.f_nom[None, :] / freq) + (1.0 - cpu_frac)
-    return table.speed[None, :] * duty / slowdown
+    times ``job.work``.  Accepts shared ``(N,)`` or per-row ``(B, N)``
+    table leaves (see :func:`batched_operating_point`)."""
+    slowdown = cpu_frac * (table.f_nom / freq) + (1.0 - cpu_frac)
+    return table.speed * duty / slowdown
+
+
+#: Phantom-lane table values used to pad heterogeneous buckets: a phantom
+#: node draws zero power idle (``idle_w=0``), can never run (its
+#: ``state_p`` rows are +inf so no cap fits, and ``speed=0`` zeroes its
+#: rate), and is numerically inert (``span=1``, ``f_min=f_nom=1`` keep
+#: every division finite).  ``p_max=0`` keeps water-fills from ever
+#: granting it budget; ``cap_floor=0`` keeps it out of floor sums.
+_PHANTOM = dict(state_p=np.inf, state_f=1.0, idle_w=0.0, p_min=1.0,
+                p_max=0.0, f_min=1.0, f_nom=1.0, span=1.0, speed=0.0,
+                cap_floor=0.0)
+
+
+def stack_lut_tables(tables: Sequence[LUTTable], n_pad: int,
+                     s_pad: int) -> LUTTable:
+    """Stack per-row cluster tables into one per-row-batched LUTTable.
+
+    Each input table covers one scenario row's cluster (``N_b`` nodes,
+    ``S_b`` states); the result holds ``(B, n_pad, s_pad)`` state tables
+    and ``(B, n_pad)`` lane vectors, padded with the :data:`_PHANTOM`
+    values so phantom lanes and phantom states are inert: +inf state
+    power never fits a cap, zero idle draw never reaches the energy
+    integral, zero ``p_max`` never attracts water-filled budget.
+    Output of this stacking is what :func:`batched_operating_point` and
+    the batch simulators consume for mixed-shape (padded bucket) runs.
+    """
+    b = len(tables)
+    state_p = np.full((b, n_pad, s_pad), _PHANTOM["state_p"])
+    state_f = np.full((b, n_pad, s_pad), _PHANTOM["state_f"])
+    lanes = {k: np.full((b, n_pad), _PHANTOM[k])
+             for k in ("idle_w", "p_min", "p_max", "f_min", "f_nom",
+                       "span", "speed", "cap_floor")}
+    for r, t in enumerate(tables):
+        n, s = t.state_p.shape
+        if n > n_pad or s > s_pad:
+            raise ValueError(f"row {r} shape ({n}, {s}) exceeds pad "
+                             f"({n_pad}, {s_pad})")
+        state_p[r, :n, :s] = t.state_p
+        state_f[r, :n, :s] = t.state_f
+        # real nodes' trailing state slots keep the lut_table convention:
+        # +inf power (never fits), last real frequency
+        state_f[r, :n, s:] = t.state_f[:, -1:]
+        for k, arr in lanes.items():
+            arr[r, :n] = getattr(t, k)
+    return LUTTable(state_p=state_p, state_f=state_f, **lanes)
 
 
 # --------------------------------------------------------------------- LUTs

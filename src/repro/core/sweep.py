@@ -10,13 +10,35 @@ centralises it with
   * parallel execution via ``concurrent.futures`` (thread, process, or
     serial executors; the simulator is pure Python, so processes give
     real speedup on big batches while threads keep zero pickling cost),
+  * batched execution (``executor="vector"`` / ``"jax"``): eligible
+    scenarios are grouped into **padded shape buckets** — same policy
+    and latency, shape dimensions rounded up to powers of two — and
+    each bucket runs as ONE vector/compiled batch, so a heterogeneous
+    scenario family (mixed graph sizes, mixed clusters, per-row bound
+    schedules) stays off the slow per-scenario event path,
   * structured results: a :class:`SweepResult` table with per-scenario
-    :class:`SimResult` rows, failure capture, and speedup lookups,
+    :class:`SimResult` rows, failure capture, speedup lookups, and
+    per-scenario backend/bucket accounting
+    (:meth:`SweepResult.backend_summary`),
   * bounded memory: scenarios default to ``trace_every=None`` so power
     traces are not retained across thousands of runs.
 
 ``SweepEngine.map`` is the same machinery for arbitrary batch work (used
 by ``launch/dryrun.py`` for its compile cells).
+
+Example — a two-graph grid batched onto the vector backend::
+
+    >>> from repro.core import (SweepEngine, scenario_grid,
+    ...                         listing2_graph, listing2_uniform,
+    ...                         homogeneous_cluster)
+    >>> grid = scenario_grid(
+    ...     {"a": listing2_graph(), "b": listing2_uniform(10.0)},
+    ...     homogeneous_cluster(3), [6.0, 9.0], ["equal-share"])
+    >>> sweep = SweepEngine(executor="vector").run(grid)
+    >>> len(sweep), sweep.failures
+    (4, [])
+    >>> round(sweep.result("a", "equal-share", 6.0).makespan, 1)
+    38.0
 """
 
 from __future__ import annotations
@@ -54,6 +76,7 @@ class Scenario:
 
     @property
     def policy_key(self) -> str:
+        """The registry key (or the instance's ``name``) for tabulation."""
         return self.policy if isinstance(self.policy, str) \
             else getattr(self.policy, "name", str(self.policy))
 
@@ -69,14 +92,21 @@ class SweepRecord:
     #: Why the cell did not run on the requested batched backend (None
     #: when it did) — batched executors fall back silently otherwise.
     fallback_reason: Optional[str] = None
+    #: Label of the batch the cell ran in (``None`` for per-scenario
+    #: event runs): ``"vector#0:shared"`` for a same-shape batch,
+    #: ``"jax#1:padded(N8,J64)"`` for a padded mixed-shape bucket.
+    bucket: Optional[str] = None
 
     @property
     def ok(self) -> bool:
+        """True when the scenario produced a result (no captured error)."""
         return self.error is None
 
 
 @dataclass
 class MapRecord:
+    """One item's outcome from :meth:`SweepEngine.map`."""
+
     label: str
     value: object = None
     error: Optional[str] = None
@@ -84,6 +114,7 @@ class MapRecord:
 
     @property
     def ok(self) -> bool:
+        """True when the item produced a value (no captured error)."""
         return self.error is None
 
 
@@ -101,16 +132,35 @@ class SweepResult:
 
     @property
     def failures(self) -> List[SweepRecord]:
+        """Records whose scenarios errored (empty on a clean sweep)."""
         return [r for r in self.records if not r.ok]
 
     def backend_summary(self) -> str:
-        """One line: cells per backend, plus why any cell fell back off
-        the requested batched backend (the satellite of ISSUE 3 — make
-        fallbacks visible instead of silent)."""
+        """One line of truthful accounting: **per-scenario** cells per
+        backend (a padded bucket of 30 scenarios counts as 30, never as
+        one record), the number of distinct batches each batched backend
+        actually launched, and why any cell fell back off the requested
+        batched backend.
+
+        >>> from repro.core import (SweepEngine, scenario_grid,
+        ...                         listing2_graph, homogeneous_cluster)
+        >>> grid = scenario_grid({"l2": listing2_graph()},
+        ...                      homogeneous_cluster(3), [6.0, 9.0],
+        ...                      ["equal-share"])
+        >>> SweepEngine(executor="vector").run(grid).backend_summary()
+        'backends: vector=2 | batches: vector=1'
+        """
         from collections import Counter
 
         counts = Counter(r.backend for r in self.records)
         parts = " ".join(f"{b}={counts[b]}" for b in sorted(counts))
+        batches = {b: len({r.bucket for r in self.records
+                           if r.backend == b and r.bucket})
+                   for b in sorted(counts)}
+        if any(batches.values()):
+            detail = ", ".join(f"{b}={n}" for b, n in batches.items()
+                               if n)
+            parts += f" | batches: {detail}"
         reasons = Counter(r.fallback_reason for r in self.records
                           if r.fallback_reason)
         if reasons:
@@ -134,10 +184,14 @@ class SweepResult:
 
     def speedup(self, name: str, policy: str, bound_w: float,
                 baseline: str = "equal-share") -> float:
+        """``policy``'s makespan speedup over ``baseline`` on one cell."""
         base = self.result(name, baseline, bound_w)
         return self.result(name, policy, bound_w).speedup_vs(base)
 
     def rows(self) -> List[Dict[str, object]]:
+        """One flat dict per record: scenario identity + tags, backend /
+        bucket / fallback accounting, and the headline result metrics
+        (or the error string)."""
         out = []
         for r in self.records:
             s = r.scenario
@@ -149,6 +203,8 @@ class SweepResult:
             }
             if r.fallback_reason is not None:
                 row["fallback_reason"] = r.fallback_reason
+            if r.bucket is not None:
+                row["bucket"] = r.bucket
             if r.ok:
                 row.update(makespan=r.result.makespan,
                            energy_j=r.result.energy_j,
@@ -161,6 +217,7 @@ class SweepResult:
         return out
 
     def to_csv(self) -> str:
+        """:meth:`rows` as CSV text (union of all row columns)."""
         rows = self.rows()
         cols: List[str] = []
         for row in rows:
@@ -203,15 +260,24 @@ class SweepEngine:
     ``executor`` is ``"thread"`` (default), ``"process"``, ``"serial"``,
     ``"vector"``, or ``"jax"``.  Process pools require picklable
     graphs/specs (true for everything in :mod:`repro.core.workloads`)
-    and string policy keys.  The batched executors group same-shape
-    scenarios — same graph, specs, policy key, and latency, differing
-    only in cluster bound — into batch-simulator runs:
-    :class:`~repro.core.batchsim.BatchSimulator` for ``"vector"``, the
-    compiled :class:`~repro.backends.jax.engine.JaxBatchSimulator` for
-    ``"jax"``.  Ineligible scenarios fall back down the chain (jax ->
-    vector -> event) with the reason recorded on
-    :attr:`SweepRecord.fallback_reason`; ``vector_dt`` is the batch
-    backends' control tick.
+    and string policy keys.
+
+    The batched executors plan eligible scenarios into **buckets**
+    (:meth:`_bucket_key`): scenarios sharing a policy key, latency,
+    trace config, and power-of-two shape envelope run as one
+    batch-simulator call — :class:`~repro.core.batchsim.BatchSimulator`
+    for ``"vector"``, the compiled
+    :class:`~repro.backends.jax.engine.JaxBatchSimulator` for ``"jax"``.
+    A bucket whose scenarios all share one graph and cluster uses the
+    zero-padding shared layout; mixed-shape buckets use the padded
+    layout (phantom jobs/lanes masked out of the physics).  Per-row
+    ``bound_schedule``\\ s ride along in either layout.  Ineligible
+    scenarios (unregistered policies, policy instances, policy kwargs,
+    trace retention on jax) fall back down the chain (jax -> vector ->
+    event) with the reason recorded on
+    :attr:`SweepRecord.fallback_reason` and the batch they ran in on
+    :attr:`SweepRecord.bucket`; ``vector_dt`` is the batch backends'
+    control tick.
     """
 
     _ILP_POLICIES = ("ilp", "ilp-makespan")
@@ -286,6 +352,8 @@ class SweepEngine:
                                elapsed_s=time.perf_counter() - t0)
 
     def run(self, scenarios: Sequence[Scenario]) -> SweepResult:
+        """Run every scenario on the configured executor; failures are
+        captured per record, never raised (check ``result.failures``)."""
         scenarios = list(scenarios)
         one = self._run_one
 
@@ -327,15 +395,15 @@ class SweepEngine:
     @staticmethod
     def _vector_ineligibility(s: Scenario) -> Optional[str]:
         """Why a scenario cannot run on the numpy batch backend (None
-        when it can)."""
+        when it can).  Bound schedules are *not* a fallback class: both
+        batched backends resolve scheduled cluster-bound arrivals at
+        exact event times."""
         from repro.policies.vector import has_vector_policy
 
         if not isinstance(s.policy, str):
             return "policy-instance"
         if not has_vector_policy(s.policy):
             return f"no-vector-policy({s.policy})"
-        if s.bound_schedule:
-            return "bound-schedule"
         if s.policy_kwargs:
             return "policy-kwargs"
         return None
@@ -358,10 +426,6 @@ class SweepEngine:
             return "trace-retention"
         return None
 
-    def _vector_key(self, s: Scenario) -> tuple:
-        return (id(s.graph), self._specs_sig(s.specs),
-                s.policy, round(s.latency_s, 12), s.trace_every)
-
     def _plan_backend(self, s: Scenario,
                       requested: str) -> Tuple[str, Optional[str]]:
         """(actual backend, fallback reason) for one scenario under the
@@ -377,28 +441,80 @@ class SweepEngine:
         reason = self._vector_ineligibility(s)
         return ("vector", None) if reason is None else ("event", reason)
 
-    def _make_batch_sim(self, backend: str, first: Scenario,
-                        bounds: List[float],
-                        assignments: List[Optional[PowerAssignment]]):
+    # ------------------------------------------------------ bucket planning
+    @staticmethod
+    def _next_pow2(x: int) -> int:
+        return 1 << (max(1, int(x)) - 1).bit_length()
+
+    @staticmethod
+    def _scenario_dims(s: Scenario,
+                       cache: Optional[Dict[tuple, tuple]] = None
+                       ) -> Tuple[int, int, int, int, int]:
+        """A scenario's batching shape ``(N, J, K, D, S)``: nodes, jobs,
+        per-lane sequence length (jobs-per-node max + 1), dependency
+        fan-in, LUT states.  ``cache`` (keyed on the graph/specs
+        identities) skips the O(J + N) graph walk for the many
+        scenarios of a sweep that share one graph."""
+        key = (id(s.graph), id(s.specs))
+        if cache is not None and key in cache:
+            return cache[key]
+        g = s.graph
+        n = len(g.nodes)
+        j = len(g.jobs)
+        k = max(len(g.node_jobs(nid)) for nid in g.nodes) + 1
+        d = max((len(job.deps) for job in g.jobs.values()), default=0) or 1
+        lut_states = max(len(sp.lut.states) for sp in s.specs)
+        dims = (n, j, k, d, lut_states)
+        if cache is not None:
+            cache[key] = dims
+        return dims
+
+    def _bucket_key(self, backend: str, s: Scenario,
+                    dims_cache: Optional[Dict[tuple, tuple]] = None
+                    ) -> tuple:
+        """Scenarios sharing a key run as ONE batch: same backend,
+        policy, latency and trace config, and the same power-of-two
+        (N, J) padding envelope.  Rounding nodes/jobs up to powers of
+        two keeps the bucket count logarithmic in shape diversity; the
+        minor dimensions (per-lane sequence, dependency fan-in, LUT
+        states) are padded to the bucket's own power-of-two maxima at
+        build time, so they never split buckets but compiled jax
+        steppers are still reused across similarly-sized sweeps."""
+        n, j = self._scenario_dims(s, dims_cache)[:2]
+        return (backend, s.policy, round(s.latency_s, 12), s.trace_every,
+                (self._next_pow2(n), self._next_pow2(j)))
+
+    def _make_batch_sim(self, backend: str, scens: List[Scenario],
+                        assignments: List[Optional[PowerAssignment]],
+                        shared: bool, pad_dims: tuple):
+        first = scens[0]
         kwargs = {}
         if first.policy in self._ILP_POLICIES:
             kwargs["assignments"] = assignments
+        schedules = [s.bound_schedule for s in scens]
+        if not any(schedules):
+            schedules = None
         if backend == "jax":
             from repro.backends.jax import (JaxBatchSimulator,
                                             get_jax_policy)
 
-            return JaxBatchSimulator(
-                first.graph, list(first.specs), bounds,
-                policy=get_jax_policy(first.policy, **kwargs),
-                dt=self.vector_dt, latency_s=first.latency_s,
-                trace_every=first.trace_every)
-        from repro.policies.vector import get_vector_policy
+            cls, policy = JaxBatchSimulator, get_jax_policy(first.policy,
+                                                            **kwargs)
+        else:
+            from repro.policies.vector import get_vector_policy
 
-        return BatchSimulator(
-            first.graph, list(first.specs), bounds,
-            policy=get_vector_policy(first.policy, **kwargs),
-            dt=self.vector_dt, latency_s=first.latency_s,
-            trace_every=first.trace_every)
+            cls, policy = BatchSimulator, get_vector_policy(first.policy,
+                                                            **kwargs)
+        common = dict(policy=policy, dt=self.vector_dt,
+                      latency_s=first.latency_s,
+                      trace_every=first.trace_every,
+                      bound_schedules=schedules)
+        bounds = [s.bound_w for s in scens]
+        if shared:
+            # single-graph batch: exact shapes, zero padding overhead
+            return cls(first.graph, list(first.specs), bounds, **common)
+        return cls.padded([(s.graph, list(s.specs)) for s in scens],
+                          bounds, pad_dims=pad_dims, **common)
 
     def _run_batched(self, scenarios: Sequence[Scenario],
                      requested: str) -> SweepResult:
@@ -406,10 +522,11 @@ class SweepEngine:
         plans = [self._plan_backend(s, requested) for s in scenarios]
         groups: Dict[tuple, List[int]] = {}
         leftovers: List[int] = []
+        dims_cache: Dict[tuple, tuple] = {}
         for k, s in enumerate(scenarios):
             backend, _ = plans[k]
             if backend in self.BATCHED_EXECUTORS:
-                groups.setdefault((backend, self._vector_key(s)),
+                groups.setdefault(self._bucket_key(backend, s, dims_cache),
                                   []).append(k)
             else:
                 leftovers.append(k)
@@ -420,7 +537,13 @@ class SweepEngine:
             except Exception as e:  # noqa: BLE001
                 return k, None, f"{type(e).__name__}: {e}"
 
-        for (backend, _), idxs in groups.items():
+        for bnum, (key, idxs) in enumerate(groups.items()):
+            backend, (n_pad, j_pad) = key[0], key[-1]
+            # minor dims: power-of-two of the bucket's own maxima
+            minor = [self._scenario_dims(scenarios[k], dims_cache)[2:]
+                     for k in idxs]
+            pad_dims = (n_pad, j_pad) + tuple(
+                self._next_pow2(max(col)) for col in zip(*minor))
             t0 = time.perf_counter()
             first = scenarios[idxs[0]]
             # Shared setup first: a failing ILP solve is a per-scenario
@@ -445,17 +568,24 @@ class SweepEngine:
                     batch_idx.append(k)
             if not batch_idx:
                 continue
+            scens = [scenarios[k] for k in batch_idx]
+            shared = (len({id(s.graph) for s in scens}) == 1
+                      and len({self._specs_sig(s.specs)
+                               for s in scens}) == 1)
+            bucket = (f"{backend}#{bnum}:shared" if shared else
+                      f"{backend}#{bnum}:padded(N{pad_dims[0]},"
+                      f"J{pad_dims[1]})")
             try:
-                sim = self._make_batch_sim(
-                    backend, first,
-                    [scenarios[k].bound_w for k in batch_idx], assignments)
+                sim = self._make_batch_sim(backend, scens, assignments,
+                                           shared, pad_dims)
                 results = sim.run()
                 per_cell = (time.perf_counter() - t0) / len(batch_idx)
                 for k, result in zip(batch_idx, results):
                     records[k] = SweepRecord(scenarios[k], result,
                                              elapsed_s=per_cell,
                                              backend=backend,
-                                             fallback_reason=plans[k][1])
+                                             fallback_reason=plans[k][1],
+                                             bucket=bucket)
             except Exception as e:  # noqa: BLE001
                 err = f"{type(e).__name__}: {e}"
                 per_cell = (time.perf_counter() - t0) / len(batch_idx)
@@ -463,7 +593,8 @@ class SweepEngine:
                     records[k] = SweepRecord(scenarios[k], None, error=err,
                                              elapsed_s=per_cell,
                                              backend=backend,
-                                             fallback_reason=plans[k][1])
+                                             fallback_reason=plans[k][1],
+                                             bucket=bucket)
 
         if leftovers:
             left = [scenarios[k] for k in leftovers]

@@ -349,6 +349,63 @@ def pipeline_graph(stages: int, microbatches: int, fwd_work: float = 4.0,
     return g
 
 
+def layered_dag(n_nodes: int, layers: int = 4, fan: int = 2,
+                work: float = 6.0, skew: float = 0.4,
+                seed: int = 6) -> JobDependencyGraph:
+    """Random layered DAG: ``layers`` jobs per node, each depending on
+    its predecessor plus up to ``fan`` random previous-layer jobs on
+    *other* nodes.
+
+    This is the shape family the scenario generators use to fill the
+    space between the hand-built workloads: cross-node skew (``skew``,
+    uniform around ``work``) plus random cross-layer edges gives the
+    blocked-node patterns power redistribution exploits, at arbitrary
+    (N, J) sizes.
+    """
+    rng = random.Random(seed)
+    g = JobDependencyGraph()
+    for k in range(layers):
+        for i in range(n_nodes):
+            deps: List[JobId] = [(i, k - 1)] if k > 0 else []
+            if k > 0:
+                others = [j for j in range(n_nodes) if j != i]
+                rng.shuffle(others)
+                deps += [(j, k - 1) for j in others[:rng.randint(0, fan)]]
+            w = work * (1.0 + rng.uniform(-skew, skew))
+            g.add(i, k, w, deps=deps,
+                  cpu_frac=rng.uniform(0.5, 0.95), tag=f"layer{k}")
+    g.topological_order()
+    return g
+
+
+def fork_join_graph(n_nodes: int, stages: int = 3, work: float = 8.0,
+                    skew: float = 0.5, seed: int = 7) -> JobDependencyGraph:
+    """Fork-join stages: node 0 forks, every node computes a skewed
+    block, node 0 joins — the classic master/worker shape whose join
+    barriers idle the fast workers (prime redistribution territory).
+    """
+    rng = random.Random(seed)
+    g = JobDependencyGraph()
+    idx = [0] * n_nodes
+
+    def push(node: int, w: float, deps: List[JobId], tag: str) -> JobId:
+        k = idx[node]
+        idx[node] += 1
+        if k > 0:   # serial order, deduped (the fork IS node 0's prior job)
+            deps = list(dict.fromkeys(deps + [(node, k - 1)]))
+        g.add(node, k, w, deps=deps, cpu_frac=0.85, tag=tag)
+        return (node, k)
+
+    join: Optional[JobId] = None
+    for s in range(stages):
+        fork = push(0, 0.5, [join] if join else [], f"fork{s}")
+        blocks = [push(i, work * (1.0 + rng.uniform(-skew, skew)),
+                       [fork], f"work{s}") for i in range(n_nodes)]
+        join = push(0, 0.5, blocks, f"join{s}")
+    g.topological_order()
+    return g
+
+
 def moe_step_graph(n_nodes: int, layers: int = 4, hot_factor: float = 2.5,
                    seed: int = 5) -> JobDependencyGraph:
     """An MoE training step: per-layer alltoall with hot-expert imbalance.

@@ -6,7 +6,10 @@ per scenario row:
 1. **idle-power reclamation / redistribution** (optional, static flag):
    reclaim the idle draw of non-running nodes and water-fill the
    remaining cluster budget over the running ones — the steady state of
-   the paper's Algorithm 1 and the oracle policy's cap rule,
+   the paper's Algorithm 1 and the oracle policy's cap rule.  ``bound``
+   is a traced ``(1, 1)`` operand, so engines with dynamic bound
+   schedules feed each wave the row's *current* bound and the
+   reclamation/water-fill follows it with no recompilation,
 2. **LUT power->frequency gather**: the §V power-to-frequency translator
    (highest DVFS state fitting each cap, sub-``p_min`` duty states
    below), expressed as an ascending compare/select scan over the
@@ -74,14 +77,20 @@ class StepTables(NamedTuple):
 def step_tables(table, dtype=np.float32) -> StepTables:
     """Build :class:`StepTables` from a :class:`~repro.core.power.LUTTable`.
 
+    Accepts a shared single-cluster table (``(N, S)`` state tables ->
+    ``(S, N)`` / ``(1, N)`` leaves) or a per-row stacked table from
+    :func:`repro.core.power.stack_lut_tables` (``(B, N, S)`` ->
+    ``(B, S, N)`` / ``(B, 1, N)`` leaves, which the engine's stacked
+    ``vmap`` slices back down to the kernel's per-row shapes).
+
     The leaves are *numpy* arrays on purpose: jitted callers convert
     them at dispatch (one fused transfer), and building them here with
     ``jnp`` would pay ~15 eager dispatches per sweep group.
     """
-    lane = lambda a: np.asarray(a, dtype).reshape(1, -1)  # noqa: E731
+    lane = lambda a: np.asarray(a, dtype)[..., None, :]   # noqa: E731
     return StepTables(
-        state_p=np.asarray(table.state_p.T, dtype),
-        state_f=np.asarray(table.state_f.T, dtype),
+        state_p=np.swapaxes(np.asarray(table.state_p, dtype), -1, -2),
+        state_f=np.swapaxes(np.asarray(table.state_f, dtype), -1, -2),
         idle_w=lane(table.idle_w), f_min=lane(table.f_min),
         f_nom=lane(table.f_nom), span=lane(table.span),
         speed=lane(table.speed), cap_floor=lane(table.cap_floor),

@@ -38,20 +38,24 @@ from .registry import PolicyRegistry
 
 def resolve_assignments(bounds: Sequence[float],
                         assignments: Optional[Sequence],
-                        solve: Callable[[float], object]) -> List[object]:
+                        solve: Callable[[int, float], object],
+                        graphs: Optional[Sequence] = None) -> List[object]:
     """One :class:`~repro.core.ilp.PowerAssignment` per batch row: the
     pre-solved entry when given (the sweep engine's shared-setup cache),
-    else ``solve(bound)`` once per unique bound (9-dp key).  Shared by
-    the vector and jax ILP policies so their solve/caching behaviour
-    cannot drift."""
-    cache: Dict[float, object] = {}
+    else ``solve(row, bound)`` once per unique (graph, bound) pair —
+    the 9-dp-rounded bound alone when ``graphs`` is omitted (a shared
+    single-graph batch), else keyed by the row graph's identity too (a
+    padded mixed-shape batch).  Shared by the vector and jax ILP
+    policies so their solve/caching behaviour cannot drift."""
+    cache: Dict[tuple, object] = {}
     out: List[object] = []
     for b, bound in enumerate(bounds):
         assignment = assignments[b] if assignments is not None else None
         if assignment is None:
-            key = round(float(bound), 9)
+            key = (id(graphs[b]) if graphs is not None else None,
+                   round(float(bound), 9))
             if key not in cache:
-                cache[key] = solve(float(bound))
+                cache[key] = solve(b, float(bound))
             assignment = cache[key]
         out.append(assignment)
     return out
@@ -71,9 +75,11 @@ class VectorPolicy:
     wants_ticks: bool = False
 
     def setup(self, sim) -> np.ndarray:
-        """Initial ``(B, N)`` caps; default is the nominal share P/n."""
-        return np.repeat(sim.bounds[:, None] / sim.n_nodes, sim.n_nodes,
-                         axis=1)
+        """Initial ``(B, N)`` caps; default is the nominal share P/n —
+        per-row ``n`` being the row's *real* node count ``sim.n_active``
+        (phantom padding lanes never run, so their cap is inert)."""
+        nominal = sim.bounds / sim.n_active
+        return np.repeat(nominal[:, None], sim.n_nodes, axis=1)
 
     def on_job_start(self, sim, rows: np.ndarray, lanes: np.ndarray,
                      jobs: np.ndarray) -> None:
@@ -86,6 +92,13 @@ class VectorPolicy:
 
     def on_tick(self, sim, rows: np.ndarray) -> None:
         """A ``dt`` boundary passed for boolean row mask ``rows``."""
+
+    def on_bound_change(self, sim, rows: np.ndarray) -> None:
+        """A scheduled cluster-bound arrival fired for boolean row mask
+        ``rows``; ``sim.bounds`` already holds the new values.  Default
+        is a no-op — matching the event protocol, where only policies
+        that opt in react to ``on_bound_change`` (the static ILP caps,
+        for instance, deliberately stay put)."""
 
 
 _REGISTRY = PolicyRegistry(VectorPolicy, "vector")
@@ -110,9 +123,14 @@ def vector_policies() -> List[str]:
 
 @register_vector_policy("equal-share", "equal_share")
 class VectorEqualShare(VectorPolicy):
-    """Static P/n caps — the base-class setup is the whole policy."""
+    """Static P/n caps — the base-class setup is almost the whole
+    policy; its only dynamic behaviour is re-splitting a changed
+    cluster bound evenly (mirroring the event policy)."""
 
     name = "equal-share"
+
+    def on_bound_change(self, sim, rows) -> None:
+        sim.cap[rows] = (sim.bounds[rows] / sim.n_active[rows])[:, None]
 
 
 @register_vector_policy("ilp")
@@ -134,21 +152,22 @@ class VectorIlpStatic(VectorPolicy):
         self.time_limit = time_limit
         self._caps_job: Optional[np.ndarray] = None   # (B, J)
 
-    def _solve(self, sim, bound_w: float):
+    def _solve(self, sim, row: int, bound_w: float):
         from repro.core.ilp import build_makespan_milp, solve_paper_ilp
 
         solver = (build_makespan_milp if self.use_makespan_milp
                   else solve_paper_ilp)
-        return solver(sim.graph, sim.specs, bound_w,
+        return solver(sim.row_graphs[row], sim.row_specs[row], bound_w,
                       time_limit=self.time_limit)
 
     def setup(self, sim) -> np.ndarray:
-        resolved = resolve_assignments(sim.bounds, self.assignments,
-                                       lambda bound: self._solve(sim,
-                                                                 bound))
+        resolved = resolve_assignments(
+            sim.bounds, self.assignments,
+            lambda row, bound: self._solve(sim, row, bound),
+            graphs=sim.row_graphs)
         caps_job = np.zeros((sim.n_rows, sim.n_jobs_total))
         for b, assignment in enumerate(resolved):
-            for k, jid in enumerate(sim.job_ids):
+            for k, jid in enumerate(sim.row_job_ids[b]):
                 caps_job[b, k] = assignment.bounds_w[jid]
         self._caps_job = caps_job
         return super().setup(sim)
@@ -173,10 +192,14 @@ def batched_waterfill(running: np.ndarray, budget: np.ndarray,
     row's running nodes, clamp saturated nodes at their ``p_max``,
     re-spread the surplus until absorbed.  Non-running nodes get the
     cap floor (they draw idle power regardless).  Row-for-row identical
-    to ``OraclePolicy._waterfill`` + ``ClusterView.clamp``."""
+    to ``OraclePolicy._waterfill`` + ``ClusterView.clamp``.  ``table``
+    leaves may be shared ``(N,)`` or per-row ``(B, N)`` (a padded
+    mixed-shape batch; phantom lanes carry ``p_max = cap_floor = 0`` and
+    are never running, so they neither attract nor strand budget)."""
     n_rows, n_nodes = running.shape
-    floor = table.cap_floor
-    caps = np.broadcast_to(floor[None, :], (n_rows, n_nodes)).copy()
+    floor = np.broadcast_to(table.cap_floor, running.shape)
+    p_max = np.broadcast_to(table.p_max, running.shape)
+    caps = floor.copy()
     open_ = running.copy()
     rem = budget.astype(float).copy()
     for _ in range(n_nodes):
@@ -185,17 +208,16 @@ def batched_waterfill(running: np.ndarray, budget: np.ndarray,
         if not live.any():
             break
         share = np.where(live, rem / np.maximum(n_open, 1), 0.0)
-        sat = open_ & (table.p_max[None, :] <= share[:, None] + 1e-12)
+        sat = open_ & (p_max <= share[:, None] + 1e-12)
         finished = live & ~sat.any(axis=1)
         if finished.any():
             m = open_ & finished[:, None]
             share_b = np.broadcast_to(share[:, None], (n_rows, n_nodes))
-            clamped = np.clip(share_b, floor[None, :], table.p_max[None, :])
-            caps = np.where(m, clamped, caps)
+            caps = np.where(m, np.clip(share_b, floor, p_max), caps)
             open_ &= ~finished[:, None]
         if sat.any():
-            caps = np.where(sat, table.p_max[None, :], caps)
-            rem = rem - (sat * table.p_max[None, :]).sum(axis=1)
+            caps = np.where(sat, p_max, caps)
+            rem = rem - (sat * p_max).sum(axis=1)
             open_ &= ~sat
     return caps
 
@@ -212,11 +234,22 @@ class VectorOracle(VectorPolicy):
 
     name = "oracle"
 
-    def on_transition(self, sim, rows) -> None:
+    def _refill(self, sim, rows) -> None:
         running = sim.running[rows]
-        idle_draw = ((~running) * sim.table.idle_w[None, :]).sum(axis=1)
+        idle_draw = ((~running) * sim.idle_w[rows]).sum(axis=1)
         budget = sim.bounds[rows] - idle_draw
-        sim.cap[rows] = batched_waterfill(running, budget, sim.table)
+        table = sim.table
+        if table.state_p.ndim == 3:        # per-row tables: slice the rows
+            table = LUTTable(**{k: getattr(table, k)[rows]
+                                for k in LUTTable.__dataclass_fields__})
+        sim.cap[rows] = batched_waterfill(running, budget, table)
+
+    def on_transition(self, sim, rows) -> None:
+        self._refill(sim, rows)
+
+    def on_bound_change(self, sim, rows) -> None:
+        # the event oracle re-resolves on bound arrivals (force=True)
+        self._refill(sim, rows)
 
 
 @register_vector_policy("heuristic")
@@ -255,8 +288,11 @@ class VectorOnlineHeuristic(VectorPolicy):
         # The delay is counted in each row's OWN ticks (rows tick at the
         # same absolute times but stop when done), so a scenario's answer
         # does not depend on which other bounds share its batch.
+        # sim.bounds is the rows' *current* bound, so a scheduled bound
+        # change propagates to the caps with the usual ring-buffer delay
+        # (the controller reacts one report round-trip later).
         running = sim.running
-        idle_draw = ((~running) * sim.table.idle_w[None, :]).sum(axis=1)
+        idle_draw = ((~running) * sim.idle_w).sum(axis=1)
         target = batched_waterfill(running, sim.bounds - idle_draw,
                                    sim.table)
         idx = np.nonzero(rows)[0]

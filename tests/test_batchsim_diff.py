@@ -207,13 +207,19 @@ class TestSweepVectorExecutor:
         rows = sweep.rows()
         assert all("backend" in row for row in rows)
 
-    def test_bound_schedule_falls_back(self):
+    def test_bound_schedule_runs_batched(self):
+        """Dynamic cluster bounds are no longer a fallback class: the
+        scheduled arrival resolves inside the vector batch at its exact
+        time and the answer still matches the event simulator."""
         g = listing2_graph()
         specs = tuple(homogeneous_cluster(3))
         s = Scenario(name="sched", graph=g, specs=specs, bound_w=9.0,
                      policy="equal-share", bound_schedule=((10.0, 3.0),))
         sweep = SweepEngine(executor="vector").run([s])
         assert not sweep.failures
+        rec = sweep.records[0]
+        assert rec.backend == "vector"
+        assert rec.fallback_reason is None
         ref = simulate(g, specs, 9.0, "equal-share",
                        bound_schedule=[(10.0, 3.0)])
         assert sweep.result("sched", "equal-share", 9.0).makespan == \
@@ -295,6 +301,202 @@ class TestSweepJaxExecutor:
         assert len(sweep.failures) == 1
         assert sweep.failures[0].scenario.name == "bad"
         assert sweep.result("ok", "ilp", 6.0).makespan > 0
+
+
+#: Per-row dynamic-bound schedules: a mid-run drop, and a drop that
+#: later recovers (the EcoShift-style "cap comes back" case).
+SCHEDULES = [
+    pytest.param(((10.0, 4.0),), id="drop"),
+    pytest.param(((6.0, 5.0), (15.0, 12.0)), id="drop-recover"),
+]
+
+
+class TestBoundSchedules:
+    """Dynamic cluster bounds in all three backends (ISSUE 4): the
+    batched backends resolve scheduled arrivals at exact event times,
+    so exact policies stay inside the differential envelopes."""
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @pytest.mark.parametrize("policy", ["equal-share", "ilp", "oracle"])
+    def test_vector_matches_event(self, policy, schedule):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        for bound in (6.0, 9.0):
+            ev = simulate(g, specs, bound, policy,
+                          bound_schedule=schedule)
+            vec = simulate_batch(g, specs, [bound], policy, dt=DT,
+                                 bound_schedules=[schedule])[0]
+            assert vec.makespan == pytest.approx(ev.makespan,
+                                                 abs=MAKESPAN_ATOL)
+            assert vec.energy_j == pytest.approx(ev.energy_j,
+                                                 rel=ENERGY_RTOL)
+            assert vec.over_budget_time == pytest.approx(
+                ev.over_budget_time, abs=2 * DT)
+
+    @pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @pytest.mark.parametrize("policy", ["equal-share", "ilp", "oracle"])
+    def test_jax_matches_event(self, policy, schedule):
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        for bound in (6.0, 9.0):
+            ev = simulate(g, specs, bound, policy,
+                          bound_schedule=schedule)
+            jx = simulate_batch_jax(g, specs, [bound], policy, dt=DT,
+                                    bound_schedules=[schedule])[0]
+            assert jx.makespan == pytest.approx(ev.makespan,
+                                                abs=MAKESPAN_ATOL)
+            assert jx.energy_j == pytest.approx(ev.energy_j,
+                                                rel=ENERGY_RTOL)
+
+    def test_schedule_is_tight_for_static_caps(self):
+        """Equal-share caps change only at bound arrivals, which the
+        wave scheme lands on exactly — agreement to float noise."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        schedule = ((5.0, 3.5), (12.0, 9.0))
+        ev = simulate(g, specs, 7.0, "equal-share",
+                      bound_schedule=schedule)
+        vec = simulate_batch(g, specs, [7.0], "equal-share",
+                             bound_schedules=[schedule])[0]
+        assert vec.makespan == pytest.approx(ev.makespan, rel=1e-9)
+        assert vec.energy_j == pytest.approx(ev.energy_j, rel=1e-9)
+
+    def test_same_time_arrivals_apply_in_given_order(self):
+        """Two arrivals at the same instant resolve last-writer-wins in
+        the order given — the event heap's semantics (the sort that
+        orders the schedule must be stable)."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        schedule = ((10.0, 12.0), (10.0, 4.0))   # 4.0 W must win
+        ev = simulate(g, specs, 9.0, "equal-share",
+                      bound_schedule=schedule)
+        vec = simulate_batch(g, specs, [9.0], "equal-share",
+                             bound_schedules=[schedule])[0]
+        assert vec.makespan == pytest.approx(ev.makespan, rel=1e-9)
+        assert vec.energy_j == pytest.approx(ev.energy_j, rel=1e-9)
+
+    def test_negative_schedule_time_rejected(self):
+        """A past arrival would run a wave backwards and corrupt the
+        energy integral — rejected up front."""
+        with pytest.raises(ValueError, match="must be >= 0"):
+            simulate_batch(listing2_graph(), homogeneous_cluster(3),
+                           [9.0], "equal-share",
+                           bound_schedules=[((-5.0, 3.0),)])
+
+    def test_heuristic_with_schedule_tracks_event(self):
+        """The tick-quantized heuristic sees a bound change one ring-
+        buffer delay late — held to its usual loose envelope."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        schedule = ((8.0, 4.0),)
+        ev = simulate(g, specs, 9.0, "heuristic",
+                      bound_schedule=schedule)
+        vec = simulate_batch(g, specs, [9.0], "heuristic", dt=DT,
+                             bound_schedules=[schedule])[0]
+        assert vec.makespan == pytest.approx(ev.makespan, rel=0.10)
+
+
+def mixed_rows():
+    """Three distinct (N, J) shapes on two different cluster families."""
+    return [
+        ("l2", listing2_graph(), homogeneous_cluster(3), 6.0),
+        ("ring", ring_trace_graph(), homogeneous_cluster(3), 8.0),
+        ("ep4", ep_like(4, "A"), heterogeneous_cluster(4), 12.0),
+        ("cg3", cg_like(3, "A"), homogeneous_cluster(3), 7.0),
+    ]
+
+
+class TestPaddedBatches:
+    """Mixed-shape padded buckets (the ISSUE 4 tentpole): one batch,
+    heterogeneous rows, each row matching its own event-simulator run."""
+
+    @pytest.mark.parametrize("policy",
+                             [p for p in EXACT if not p.startswith("ilp")])
+    def test_padded_vector_matches_event(self, policy):
+        from repro.core.batchsim import BatchSimulator
+
+        rows = mixed_rows()
+        sim = BatchSimulator.padded(
+            [(g, specs) for _, g, specs, _ in rows],
+            [b for _, _, _, b in rows], policy=policy, dt=DT)
+        results = sim.run()
+        for (name, g, specs, bound), got in zip(rows, results):
+            ev = simulate(g, specs, bound, policy)
+            assert got.makespan == pytest.approx(
+                ev.makespan, abs=MAKESPAN_ATOL), f"{name}/{policy}"
+            assert got.energy_j == pytest.approx(ev.energy_j,
+                                                 rel=ENERGY_RTOL)
+            assert got.job_ends.keys() == ev.job_ends.keys()
+
+    @pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+    @pytest.mark.parametrize("policy",
+                             [p for p in EXACT if not p.startswith("ilp")])
+    def test_padded_jax_matches_event(self, policy):
+        from repro.backends.jax import JaxBatchSimulator
+
+        rows = mixed_rows()
+        sim = JaxBatchSimulator.padded(
+            [(g, specs) for _, g, specs, _ in rows],
+            [b for _, _, _, b in rows], policy=policy, dt=DT)
+        results = sim.run()
+        for (name, g, specs, bound), got in zip(rows, results):
+            ev = simulate(g, specs, bound, policy)
+            assert got.makespan == pytest.approx(
+                ev.makespan, abs=MAKESPAN_ATOL), f"{name}/{policy}"
+            assert got.energy_j == pytest.approx(ev.energy_j,
+                                                 rel=ENERGY_RTOL)
+
+    def test_padded_ilp_uses_per_row_graphs(self):
+        """The ILP policy must solve each row's OWN graph — a padded
+        batch of two different graphs gets two different assignments."""
+        from repro.core.batchsim import BatchSimulator
+
+        g1, g2 = listing2_graph(), listing2_random(4.0, seed=9)
+        specs = homogeneous_cluster(3)
+        sim = BatchSimulator.padded([(g1, specs), (g2, specs)],
+                                    [6.0, 6.0], policy="ilp")
+        results = sim.run()
+        for g, got in zip((g1, g2), results):
+            ev = simulate(g, specs, 6.0, "ilp")
+            assert got.makespan == pytest.approx(ev.makespan,
+                                                 abs=MAKESPAN_ATOL)
+
+    def test_sweep_vector_buckets_mixed_shapes(self):
+        """A mixed-shape grid batches onto the vector backend with zero
+        event fallbacks and visible bucket accounting."""
+        scenarios = [
+            Scenario(name=name, graph=g, specs=tuple(specs),
+                     bound_w=bound, policy=p)
+            for name, g, specs, bound in mixed_rows()
+            for p in ("equal-share", "oracle")
+        ]
+        sweep = SweepEngine(executor="vector").run(scenarios)
+        assert not sweep.failures
+        assert all(r.backend == "vector" for r in sweep.records)
+        assert all(r.bucket for r in sweep.records)
+        assert "batches: vector=" in sweep.backend_summary()
+        for rec in sweep.records:
+            s = rec.scenario
+            ev = simulate(s.graph, s.specs, s.bound_w, s.policy)
+            assert rec.result.makespan == pytest.approx(
+                ev.makespan, abs=MAKESPAN_ATOL)
+
+    def test_backend_summary_counts_scenarios_not_buckets(self):
+        """Fallback accounting stays truthful under bucketing: a padded
+        bucket of N scenarios reports N per-scenario records."""
+        scenarios = [
+            Scenario(name=name, graph=g, specs=tuple(specs),
+                     bound_w=bound, policy="equal-share")
+            for name, g, specs, bound in mixed_rows()
+        ]
+        sweep = SweepEngine(executor="vector").run(scenarios)
+        assert len(sweep.records) == len(scenarios)
+        summary = sweep.backend_summary()
+        assert f"vector={len(scenarios)}" in summary
+        n_buckets = len({r.bucket for r in sweep.records})
+        assert f"batches: vector={n_buckets}" in summary
+        assert n_buckets < len(scenarios)
 
 
 class TestBatchSimValidation:

@@ -1,0 +1,178 @@
+"""Scenario-family generators + padded-batch masking properties (ISSUE 4).
+
+Covers: seeded determinism of the family generators, the relative
+bound/bound-step scaling contract, the phantom-padding property (padded
+jobs/lanes never consume power — a padded row's physics is identical to
+its unpadded run), and the acceptance criterion: a mixed-shape family
+with dynamic-bound cells sweeps through ``SweepEngine(executor="jax")``
+with zero event-simulator fallbacks while matching the event backend.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (FamilyMember, ScenarioFamily, SweepEngine,
+                        heterogeneous_cluster, homogeneous_cluster,
+                        listing2_graph, lm_family, mixed_family,
+                        npb_family, random_layered_family, simulate,
+                        simulate_batch)
+from repro.core.batchsim import BatchSimulator
+from repro.core.power import (max_useful_cluster_bound,
+                              min_feasible_cluster_bound)
+from repro.core.workloads import fork_join_graph, layered_dag
+from repro.backends.jax import HAS_JAX
+
+DT = 0.05
+MAKESPAN_ATOL = 2 * DT
+ENERGY_RTOL = 0.01
+
+
+class TestFamilyGenerators:
+    @pytest.mark.parametrize("factory", [mixed_family,
+                                         random_layered_family,
+                                         npb_family, lm_family])
+    def test_seeded_determinism(self, factory):
+        """Same seed -> identical scenario grids (names, bounds,
+        schedules); different seed -> a different family."""
+        a = factory(seed=5).scenarios()
+        b = factory(seed=5).scenarios()
+        assert [(s.name, s.bound_w, s.bound_schedule) for s in a] == \
+            [(s.name, s.bound_w, s.bound_schedule) for s in b]
+        c = factory(seed=6).scenarios()
+        assert [(s.name, s.bound_w) for s in a] != \
+            [(s.name, s.bound_w) for s in c]
+
+    def test_mixed_family_shape_diversity(self):
+        fam = mixed_family(seed=0)
+        assert len(fam.shapes()) >= 3
+        assert any(s.bound_schedule for s in fam.scenarios())
+
+    def test_bounds_scale_with_each_members_cluster(self):
+        fam = mixed_family(seed=0)
+        for m in fam.members:
+            lo = min_feasible_cluster_bound(m.specs)
+            hi = max_useful_cluster_bound(m.specs)
+            for bound in fam.member_bounds(m):
+                assert lo <= bound <= hi
+
+    def test_bound_steps_scale_with_scenario_bound(self):
+        g = listing2_graph()
+        member = FamilyMember("m", g, tuple(homogeneous_cluster(3)),
+                              bound_steps=((10.0, 0.5),))
+        fam = ScenarioFamily("f", [member], bound_fracs=(0.2, 0.8),
+                             policies=("equal-share",))
+        cells = fam.scenarios()
+        assert len(cells) == 2
+        for s in cells:
+            (t, w), = s.bound_schedule
+            assert t == 10.0
+            assert w == pytest.approx(0.5 * s.bound_w)
+
+    def test_scenario_tags_carry_family_metadata(self):
+        s = mixed_family(seed=0).scenarios()[0]
+        assert {"family", "member", "shape"} <= set(s.tags)
+
+    def test_empty_family_rejected(self):
+        with pytest.raises(ValueError, match="at least one member"):
+            ScenarioFamily("empty", [])
+
+
+class TestPhantomPadding:
+    """Property: phantom padded jobs/lanes never consume power."""
+
+    def rows(self):
+        return [
+            (listing2_graph(), homogeneous_cluster(3), 6.0),
+            (layered_dag(5, layers=3, seed=4), homogeneous_cluster(5),
+             14.0),
+            (fork_join_graph(4, stages=2, seed=5),
+             heterogeneous_cluster(4), 11.0),
+        ]
+
+    @pytest.mark.parametrize("policy", ["equal-share", "oracle"])
+    def test_padded_rows_match_unpadded_exactly(self, policy):
+        """Each padded row's energy/makespan/peak equals its own
+        single-row unpadded run to float noise — any phantom draw would
+        show up in the energy integral."""
+        rows = self.rows()
+        sim = BatchSimulator.padded(
+            [(g, specs) for g, specs, _ in rows],
+            [b for _, _, b in rows], policy=policy, dt=DT)
+        padded = sim.run()
+        for (g, specs, bound), got in zip(rows, padded):
+            solo = simulate_batch(g, specs, [bound], policy, dt=DT)[0]
+            assert got.makespan == pytest.approx(solo.makespan, rel=1e-12)
+            assert got.energy_j == pytest.approx(solo.energy_j, rel=1e-12)
+            assert got.peak_power_w == pytest.approx(solo.peak_power_w,
+                                                     rel=1e-12)
+
+    def test_forced_wide_padding_is_inert(self):
+        """Padding the same row to a much larger envelope changes
+        nothing: phantom lanes draw zero idle power and phantom job
+        slots are born complete."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        tight = BatchSimulator.padded([(g, specs)], [6.0]).run()[0]
+        wide = BatchSimulator.padded([(g, specs)], [6.0],
+                                     pad_dims=(16, 64, 16, 8, 16)).run()[0]
+        assert wide.makespan == tight.makespan
+        assert wide.energy_j == pytest.approx(tight.energy_j, rel=1e-12)
+        assert wide.peak_power_w == pytest.approx(tight.peak_power_w,
+                                                  rel=1e-12)
+
+    def test_phantom_lane_caps_attract_no_budget(self):
+        """The oracle water-fill over a padded batch grants phantom
+        lanes exactly their cap floor (zero)."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        sim = BatchSimulator.padded([(g, specs)], [6.0], policy="oracle",
+                                    pad_dims=(8, 16, 8, 4, 8))
+        sim.run()
+        assert np.all(sim.cap[:, 3:] == 0.0)
+
+    def test_traced_padded_power_matches_event_trace(self):
+        """The padded row's cluster-power trace equals the event
+        simulator's — phantom lanes contribute nothing at any instant."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        sim = BatchSimulator.padded([(g, specs)], [6.0],
+                                    policy="equal-share", trace_every=0.0,
+                                    pad_dims=(8, 16, 8, 4, 8))
+        trace = sim.run()[0].power_trace
+        ev = simulate(g, specs, 6.0, "equal-share", trace_every=0.0)
+        assert dict(trace) == pytest.approx(dict(ev.power_trace))
+
+
+class TestMixedFamilyAcceptance:
+    """ISSUE 4 acceptance: >= 3 shapes + dynamic-bound cells, zero
+    event fallbacks on the batched executors, event-envelope agreement."""
+
+    def family_cells(self):
+        return mixed_family(seed=11).scenarios()
+
+    def check(self, executor):
+        cells = self.family_cells()
+        fam = mixed_family(seed=11)
+        assert len(fam.shapes()) >= 3
+        assert any(s.bound_schedule for s in cells)
+        sweep = SweepEngine(executor=executor).run(cells)
+        assert not sweep.failures
+        fallbacks = [r for r in sweep.records if r.backend == "event"]
+        assert fallbacks == []
+        assert all(r.backend == executor for r in sweep.records)
+        for rec in sweep.records:
+            s = rec.scenario
+            ev = simulate(s.graph, s.specs, s.bound_w, s.policy,
+                          bound_schedule=s.bound_schedule)
+            assert rec.result.makespan == pytest.approx(
+                ev.makespan, abs=MAKESPAN_ATOL), \
+                f"{s.tags['member']}/{s.policy_key}@{s.bound_w}"
+            assert rec.result.energy_j == pytest.approx(
+                ev.energy_j, rel=ENERGY_RTOL)
+
+    def test_vector_executor(self):
+        self.check("vector")
+
+    @pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+    def test_jax_executor(self):
+        self.check("jax")
