@@ -100,7 +100,7 @@ def main(quick: bool = False, backend: str = "event") -> List[str]:
             raise RuntimeError(f"{backend} failures: "
                                f"{[(r.scenario.name, r.error) for r in sweep.failures]}")
         print(f"  {sweep.backend_summary()}")
-        fell_back = [r for r in sweep.records if r.backend == "event"]
+        fell_back = sweep.event_fallbacks()
         if fell_back:
             raise RuntimeError(
                 f"{len(fell_back)} cells fell back to the event "

@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="full problem classes / sweep resolutions")
-    ap.add_argument("--only", default=None,
+    ap.add_argument("--only", "--workload", dest="only", default=None,
                     help="comma-separated bench names")
     ap.add_argument("--list-policies", action="store_true",
                     help="list registered power policies and exit")
@@ -50,7 +50,7 @@ def main(argv=None) -> int:
 
     from . import (depth_tables, family_sweep, fig8_power_sweep,
                    fig9_stddev_sweep, lm_workloads, npb_analogues,
-                   roofline_report)
+                   roofline_report, trace_replay)
 
     benches = {
         "depth_tables": depth_tables.main,        # Tables I & II
@@ -58,6 +58,7 @@ def main(argv=None) -> int:
         "fig9": fig9_stddev_sweep.main,           # Fig. 9
         "npb": npb_analogues.main,                # Figs. 11-13
         "family": family_sweep.main,              # mixed scenario families
+        "trace-replay": trace_replay.main,        # corpus ingest + sweep
         "lm_workloads": lm_workloads.main,        # pipeline/MoE graphs
         "roofline": roofline_report.main,         # §Roofline table
     }

@@ -1,0 +1,171 @@
+"""Trace-replay benchmark: corpus ingestion -> batched family sweep.
+
+The trace frontend's end-to-end path, timed stage by stage: record a
+synthetic corpus over the workload zoo (:mod:`repro.traces.record`),
+reconstruct every trace back into a dependency graph (calibrating
+durations through the power LUTs), replay-validate each against its own
+wall clock, then sweep the whole corpus as one
+:class:`~repro.core.scenarios.ScenarioFamily` through the requested
+backend.  Under ``--backend vector``/``jax`` the acceptance bar is the
+same as the family bench: **zero** event-simulator fallbacks — a corpus
+of mixed trace shapes must run entirely as padded batches.
+
+Results land in ``BENCH_traces.json`` via
+:data:`benchmarks.common.BENCH_RECORDS` (CI uploads it): ingest /
+reconstruct / sweep wall-clocks, the worst replay error, and the batch
+accounting.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import SweepEngine
+from repro.traces import (TraceCorpus, record_workload, replay_report,
+                          with_noise)
+
+from .common import BENCH_RECORDS, csv_line
+
+#: (workload, recorder kwargs) — the quick corpus.  Mixed shapes and
+#: clusters on purpose: the sweep must bucket them, not fall back.
+QUICK_CORPUS = [
+    ("listing2", {}),
+    ("npb-is", {"n_nodes": 4, "hetero": True}),
+    ("npb-ep", {"n_nodes": 4}),
+    ("npb-cg", {"n_nodes": 3}),
+    ("layered", {"n_nodes": 5, "seed": 6}),
+    ("forkjoin", {"n_nodes": 4, "seed": 7}),
+]
+
+#: Extra members for --full: bigger classes, random DVFS recordings.
+FULL_CORPUS = QUICK_CORPUS + [
+    ("npb-is", {"n_nodes": 5, "klass": "B", "seed": 2}),
+    ("npb-ep", {"n_nodes": 6, "klass": "B", "seed": 3, "hetero": True}),
+    ("moe", {"n_nodes": 6, "seed": 4}),
+    ("pipeline", {"n_nodes": 4, "seed": 5}),
+    ("npb-cg", {"n_nodes": 4, "seed": 8, "freqs": "random"}),
+    ("layered", {"n_nodes": 6, "seed": 9, "freqs": "random"}),
+]
+
+EXACT_POLICIES = ("equal-share", "oracle")
+
+
+def record_corpus_traces(quick: bool = True) -> list:
+    """Record the bench corpus in memory (no filesystem dependency)."""
+    plan = QUICK_CORPUS if quick else FULL_CORPUS
+    return [record_workload(workload, **dict({"seed": i}, **kwargs))
+            for i, (workload, kwargs) in enumerate(plan)]
+
+
+def build_corpus(quick: bool = True) -> TraceCorpus:
+    """The bench corpus, reconstructed and ready to sweep."""
+    return TraceCorpus.from_traces(record_corpus_traces(quick))
+
+
+def main(quick: bool = False, backend: str = "event") -> List[str]:
+    t0 = time.perf_counter()
+    traces = record_corpus_traces(quick)
+    t_record = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    corpus = TraceCorpus.from_traces(traces)
+    t_reconstruct = time.perf_counter() - t0
+    jobs = sum(len(e.recon.graph) for e in corpus)
+    records = sum(len(e.trace.events) for e in corpus)
+
+    reports = corpus.validate()
+    worst = max(r.rel_err for r in reports)
+    bad = [r for r in reports if not r.ok]
+    if bad:
+        raise RuntimeError(f"replay validation failed: {bad}")
+    # a noisy replay rides along to exercise the lenient path
+    noisy = with_noise(traces[0], jitter_s=0.005, skew_s=0.02, seed=1)
+    from repro.traces import reconstruct
+
+    noisy_err = replay_report(reconstruct(noisy, strict=False),
+                              tol=0.10).rel_err
+    print(f"corpus: {len(corpus)} traces, {records} records -> {jobs} "
+          f"jobs  record {t_record:.3f}s  reconstruct "
+          f"{t_reconstruct:.3f}s")
+    print(f"replay validation: worst err {worst:.2e} (noise-free), "
+          f"{noisy_err:.2%} (default noise)")
+
+    fracs = (0.15, 0.4, 0.8) if quick else \
+        tuple(0.1 + 0.08 * i for i in range(10))
+    family = corpus.family(bound_fracs=fracs, policies=EXACT_POLICIES)
+    scenarios = family.scenarios()
+    cells = len(scenarios)
+    shapes = sorted({s.tags["shape"] for s in scenarios})
+    print(f"sweep: {cells} cells over {len(shapes)} shapes")
+
+    t0 = time.perf_counter()
+    ev = SweepEngine(executor="thread").run(scenarios)
+    t_event = time.perf_counter() - t0
+    if ev.failures:
+        raise RuntimeError(
+            f"event failures: "
+            f"{[(r.scenario.name, r.error) for r in ev.failures]}")
+    print(f"  event (thread pool): {t_event:.3f}s")
+    bench = {
+        "corpus": {"traces": len(corpus), "records": records,
+                   "jobs": jobs, "record_s": t_record,
+                   "reconstruct_s": t_reconstruct,
+                   "replay_worst_err": worst,
+                   "replay_noisy_err": noisy_err},
+        "grid": {"cells": cells, "shapes": shapes,
+                 "policies": list(EXACT_POLICIES)},
+        "event": {"wall_s": t_event, "us_per_cell": t_event * 1e6 / cells},
+    }
+    out = [csv_line("trace_ingest", t_reconstruct * 1e6 / max(jobs, 1),
+                    f"traces={len(corpus)};jobs={jobs};"
+                    f"worst_replay_err={worst:.2e}"),
+           csv_line("trace_event", t_event * 1e6 / cells,
+                    f"cells={cells}")]
+
+    if backend in SweepEngine.BATCHED_EXECUTORS:
+        if backend == "jax":
+            from repro.backends.jax import HAS_JAX
+
+            if not HAS_JAX:
+                print("  jax requested but not installed; timing the "
+                      "vector buckets instead")
+                backend = "vector"
+        engine = SweepEngine(executor=backend)
+        if backend == "jax":
+            engine.run(scenarios)            # compile warm-up per bucket
+        t0 = time.perf_counter()
+        sweep = engine.run(scenarios)
+        t_batched = time.perf_counter() - t0
+        if sweep.failures:
+            raise RuntimeError(
+                f"{backend} failures: "
+                f"{[(r.scenario.name, r.error) for r in sweep.failures]}")
+        print(f"  {sweep.backend_summary()}")
+        fell_back = sweep.event_fallbacks()
+        if fell_back:
+            raise RuntimeError(
+                f"{len(fell_back)} cells fell back to the event "
+                f"simulator — a trace corpus must batch completely")
+        maxdiff = max(abs(a.result.makespan - b.result.makespan)
+                      for a, b in zip(ev.records, sweep.records))
+        n_batches = len({r.bucket for r in sweep.records if r.bucket})
+        speedup = t_event / t_batched
+        print(f"  {backend}: {t_batched:.3f}s in {n_batches} batches  "
+              f"speedup {speedup:.1f}x vs event  max |dmakespan| "
+              f"{maxdiff:.2e}")
+        bench[backend] = {"wall_s": t_batched,
+                          "us_per_cell": t_batched * 1e6 / cells,
+                          "batches": n_batches,
+                          "max_makespan_diff_vs_event": maxdiff}
+        out.append(csv_line(f"trace_{backend}",
+                            t_batched * 1e6 / cells,
+                            f"speedup={speedup:.1f}x;cells={cells};"
+                            f"batches={n_batches};"
+                            f"maxdiff={maxdiff:.2e}"))
+    BENCH_RECORDS["trace_replay"] = bench
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -40,9 +40,11 @@ from .scenarios import (FamilyMember, ScenarioFamily, lm_family,
 from .simulator import SimResult, Simulator, simulate
 from .sweep import (MapRecord, Scenario, SweepEngine, SweepRecord,
                     SweepResult, compare_policies, scenario_grid)
-from .workloads import (LISTING2_TIMES, TraceBuilder, cg_like, ep_like,
-                        fork_join_graph, is_like, layered_dag,
+from .workloads import (LISTING2_TIMES, MatchReport, TraceBuilder,
+                        cg_builder, cg_like, ep_builder, ep_like,
+                        fork_join_graph, is_builder, is_like, layered_dag,
                         listing2_graph, listing2_random, listing2_uniform,
-                        moe_step_graph, pipeline_graph)
+                        match_comm_ops, moe_step_builder, moe_step_graph,
+                        pipeline_graph)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -107,6 +107,23 @@ class ScenarioFamily:
         return len(self.members) * len(self.bound_fracs) \
             * len(self.policies)
 
+    @classmethod
+    def from_corpus(cls, path, name: str = "traces",
+                    bound_fracs: Sequence[float] = (0.15, 0.4, 0.8),
+                    policies: Sequence[Union[str, object]] =
+                    DEFAULT_POLICIES,
+                    latency_s: float = 0.05,
+                    strict: bool = True) -> "ScenarioFamily":
+        """A family whose members are reconstructed from a directory of
+        recorded MPI traces (the :mod:`repro.traces` frontend) — each
+        trace's graph on its own header-declared cluster, swept like any
+        synthetic member.  See ``docs/traces.md``."""
+        from repro.traces import TraceCorpus
+
+        corpus = TraceCorpus.from_dir(path, strict=strict)
+        return corpus.family(name=name, bound_fracs=bound_fracs,
+                             policies=policies, latency_s=latency_s)
+
     def shapes(self) -> List[Tuple[int, int]]:
         """Sorted distinct (nodes, jobs) shape classes in the family."""
         return sorted({m.shape for m in self.members})

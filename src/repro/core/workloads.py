@@ -20,6 +20,14 @@ The paper draws node 1's lone-recv job (J_{1,3}) with the dependency on the
 recv job itself because that job *is* the recv; the hand-coded
 ``listing2_graph`` keeps the paper's exact edges, while builder-generated
 graphs use the uniform next-job convention.
+
+The convention's matching engine — collectives by occurrence order per
+(name, group), sends/recvs FIFO per (src, dst, tag) — is factored out as
+:func:`match_comm_ops` so the MPI-trace ingestion pass
+(:mod:`repro.traces.reconstruct`) compiles recorded logs with byte-for-
+byte the same semantics the builder uses; the ``*_builder`` variants of
+the NPB/MoE generators expose their op scripts unbuilt for the synthetic
+trace recorder to serialise.
 """
 
 from __future__ import annotations
@@ -93,10 +101,127 @@ def listing2_random(stddev: float, mean: float = 10.0,
 
 # ------------------------------------------------------------- TraceBuilder
 @dataclass
-class _Segment:
+class Segment:
+    """One compute block of a per-node trace script, optionally ended by a
+    communication op: ``("coll", name, group)`` | ``("send", dst[, tag])``
+    | ``("recv", src[, tag])``."""
+
     work: float
     cpu_frac: float
-    op: Optional[Tuple] = None  # ("coll", name, group) | ("send", dst) | ("recv", src)
+    op: Optional[Tuple] = None
+
+
+_Segment = Segment  # pre-traces-subsystem private name
+
+
+@dataclass
+class MatchReport:
+    """Outcome of :func:`match_comm_ops` — all zeros on a clean match.
+
+    In lenient mode (``strict=False``, the trace-ingestion path) unmatched
+    sends/recvs and collective occurrences with missing members are
+    *dropped* (their dependency edges are simply not emitted) and counted
+    here instead of raising.
+    """
+
+    dropped_sends: int = 0
+    dropped_recvs: int = 0
+    dropped_members: int = 0
+
+    @property
+    def clean(self) -> bool:
+        """True when every op found its match."""
+        return not (self.dropped_sends or self.dropped_recvs
+                    or self.dropped_members)
+
+
+#: One op occurrence for :func:`match_comm_ops`: ``(op, producer, child)``
+#: where ``producer`` is the job that completed immediately before the op
+#: on that node (``None`` if the op precedes every job) and ``child`` the
+#: job started immediately after it (``None`` past the last job).
+OpSite = Tuple[Tuple, Optional[JobId], Optional[JobId]]
+
+
+def match_comm_ops(sites: Mapping[int, Sequence[OpSite]],
+                   strict: bool = True
+                   ) -> Tuple[Dict[JobId, List[JobId]], MatchReport]:
+    """THE dependency-attachment convention, as a reusable matching engine.
+
+    ``sites`` maps each node to its ordered communication-op occurrences.
+    Collectives match by occurrence order within the same ``(name,
+    group)``; sends/recvs pair FIFO per ``(src, dst, tag)`` channel (ops
+    without an explicit tag use ``""``).  Every receiving op (recv or
+    collective) makes its *child* job depend on the matched *producer*
+    jobs — the convention :class:`TraceBuilder` has always compiled and
+    the trace-ingestion pass in :mod:`repro.traces` now shares.
+
+    Returns ``(deps, report)``: extra cross-node dependency edges keyed by
+    child job, plus the :class:`MatchReport`.  ``strict=True`` raises
+    ``ValueError`` on mismatched collectives or unmatched sends/recvs;
+    ``strict=False`` drops them (noisy-trace ingestion).
+    """
+    # member: (node, producer, child) per collective occurrence
+    coll_seen: Dict[Tuple, List[List[Tuple]]] = {}
+    sends: Dict[Tuple[int, int, str], List[Optional[JobId]]] = {}
+    recvs: Dict[Tuple[int, int, str], List[Optional[JobId]]] = {}
+    for node in sorted(sites):
+        coll_count: Dict[Tuple, int] = {}
+        for op, producer, child in sites[node]:
+            kind = op[0]
+            if kind == "coll":
+                _, name, group = op
+                key = (name, tuple(sorted(group)))
+                idx = coll_count.get(key, 0)
+                coll_count[key] = idx + 1
+                coll_seen.setdefault(key, [])
+                while len(coll_seen[key]) <= idx:
+                    coll_seen[key].append([])
+                coll_seen[key][idx].append((node, producer, child))
+            elif kind == "send":
+                tag = op[2] if len(op) > 2 else ""
+                sends.setdefault((node, op[1], tag), []).append(producer)
+            elif kind == "recv":
+                tag = op[2] if len(op) > 2 else ""
+                recvs.setdefault((op[1], node, tag), []).append(child)
+            else:
+                raise ValueError(f"unknown comm op kind {kind!r}")
+
+    deps: Dict[JobId, List[JobId]] = {}
+    report = MatchReport()
+
+    def add_dep(child: Optional[JobId], dep: Optional[JobId]) -> None:
+        if child is not None and dep is not None:
+            deps.setdefault(child, []).append(dep)
+
+    for key, occurrences in coll_seen.items():
+        _, group = key
+        for members in occurrences:
+            nodes = {node for node, _, _ in members}
+            if nodes != set(group):
+                if strict:
+                    raise ValueError(
+                        f"collective {key} mismatched across nodes: "
+                        f"{sorted(nodes)}")
+                report.dropped_members += len(set(group) - nodes)
+            for node, _, child in members:
+                for other, producer, _ in members:
+                    if other != node:
+                        add_dep(child, producer)
+
+    for channel in sorted(set(sends) | set(recvs)):
+        src, dst, _tag = channel
+        producers = sends.get(channel, [])
+        children = recvs.get(channel, [])
+        if len(producers) != len(children) and strict:
+            raise ValueError(
+                f"unmatched send/recv {src}->{dst}: "
+                f"{len(producers)} sends, {len(children)} recvs")
+        n = min(len(producers), len(children))
+        report.dropped_sends += len(producers) - n
+        report.dropped_recvs += len(children) - n
+        for producer, child in zip(producers, children):
+            add_dep(child, producer)
+    return deps, report
 
 
 class TraceBuilder:
@@ -127,13 +252,25 @@ class TraceBuilder:
     def collective(self, name: str, group: Sequence[int]) -> None:
         """All nodes in ``group`` hit collective ``name`` (in trace order)."""
         for node in group:
-            self._end_with(node, ("coll", name, tuple(sorted(group))))
+            self.join_collective(node, name, group)
+
+    def join_collective(self, node: int, name: str,
+                        group: Sequence[int]) -> None:
+        """One node's participation in a collective — the per-rank form a
+        recorded trace arrives in (ranks log their own enter events)."""
+        self._end_with(node, ("coll", name, tuple(sorted(group))))
 
     def send(self, src: int, dst: int) -> None:
         self._end_with(src, ("send", dst))
 
     def recv(self, dst: int, src: int) -> None:
         self._end_with(dst, ("recv", src))
+
+    def script(self) -> List[List[Segment]]:
+        """The per-node segment script recorded so far (the live lists —
+        callers must treat them as read-only).  This is what the synthetic
+        trace recorder (:mod:`repro.traces.record`) serialises."""
+        return self._traces
 
     # compilation -----------------------------------------------------------
     def build(self) -> JobDependencyGraph:
@@ -142,7 +279,7 @@ class TraceBuilder:
         # successor job to carry their dependency.
         for node, trace in enumerate(self._traces):
             if trace and trace[-1].op is not None:
-                trace.append(_Segment(0.0, 1.0))
+                trace.append(Segment(0.0, 1.0))
 
         # Pass 1: create jobs with serial deps.
         for node, trace in enumerate(self._traces):
@@ -154,54 +291,14 @@ class TraceBuilder:
                 g.add(node, k, seg.work, deps=deps, cpu_frac=seg.cpu_frac,
                       tag=tag)
 
-        # Pass 2: cross-node deps.  Collectives match by occurrence order
-        # within the same (name, group); sends/recvs FIFO per (src, dst).
-        coll_seen: Dict[Tuple, List[List[JobId]]] = {}
-        sends: Dict[Tuple[int, int], List[JobId]] = {}
-        recvs: Dict[Tuple[int, int], List[JobId]] = {}
-        for node, trace in enumerate(self._traces):
-            coll_count: Dict[Tuple, int] = {}
-            for k, seg in enumerate(trace):
-                if seg.op is None:
-                    continue
-                kind = seg.op[0]
-                if kind == "coll":
-                    _, name, group = seg.op
-                    key = (name, group)
-                    idx = coll_count.get(key, 0)
-                    coll_count[key] = idx + 1
-                    coll_seen.setdefault(key, [])
-                    while len(coll_seen[key]) <= idx:
-                        coll_seen[key].append([])
-                    coll_seen[key][idx].append((node, k))
-                elif kind == "send":
-                    sends.setdefault((node, seg.op[1]), []).append((node, k))
-                elif kind == "recv":
-                    recvs.setdefault((seg.op[1], node), []).append((node, k))
-
-        extra: Dict[JobId, List[JobId]] = {}
-
-        def add_dep(child: JobId, dep: JobId) -> None:
-            extra.setdefault(child, []).append(dep)
-
-        for key, occurrences in coll_seen.items():
-            _, group = key
-            for members in occurrences:
-                if {m[0] for m in members} != set(group):
-                    raise ValueError(
-                        f"collective {key} mismatched across nodes: {members}")
-                for (node, k) in members:
-                    for (other, ko) in members:
-                        if other != node:
-                            add_dep((node, k + 1), (other, ko))
-        for (src, dst), send_jobs in sends.items():
-            recv_jobs = recvs.get((src, dst), [])
-            if len(recv_jobs) != len(send_jobs):
-                raise ValueError(
-                    f"unmatched send/recv {src}->{dst}: "
-                    f"{len(send_jobs)} sends, {len(recv_jobs)} recvs")
-            for s_jid, r_jid in zip(send_jobs, recv_jobs):
-                add_dep((r_jid[0], r_jid[1] + 1), s_jid)
+        # Pass 2: cross-node deps through the shared matching engine — an
+        # op ending segment k produces from (node, k) and attaches the
+        # dependency to (node, k + 1).
+        sites: Dict[int, List[OpSite]] = {
+            node: [(seg.op, (node, k), (node, k + 1))
+                   for k, seg in enumerate(trace) if seg.op is not None]
+            for node, trace in enumerate(self._traces)}
+        extra, _report = match_comm_ops(sites, strict=True)
 
         # Rebuild with merged deps (jobs are frozen dataclasses).
         g2 = JobDependencyGraph()
@@ -223,16 +320,10 @@ def _skew(rng: random.Random, spread: float) -> float:
     return rng.uniform(1.0 - spread, 1.0 + spread)
 
 
-def is_like(n_nodes: int, klass: str = "A", iterations: int = 4,
-            seed: int = 1) -> JobDependencyGraph:
-    """Integer-Sort analogue (§VII-B): memory-intensive, alltoall-heavy.
-
-    Each iteration mirrors NPB IS ``rank()`` (paper Listing 1): bucket
-    count (compute) -> Allreduce -> key redistribution (compute) ->
-    Alltoall -> Alltoallv -> local ranking (compute).  cpu_frac is low
-    (memory-bound), so frequency boosts help moderately — the paper sees
-    modest IS speedups that improve with class size.
-    """
+def is_builder(n_nodes: int, klass: str = "A", iterations: int = 4,
+               seed: int = 1) -> TraceBuilder:
+    """The :func:`is_like` op script as an unbuilt :class:`TraceBuilder`
+    (the form the synthetic trace recorder wraps)."""
     scale = NPB_CLASSES[klass]
     rng = random.Random(seed)
     tb = TraceBuilder(n_nodes)
@@ -250,16 +341,25 @@ def is_like(n_nodes: int, klass: str = "A", iterations: int = 4,
         for node in range(n_nodes):
             tb.compute(node, 4.0 * scale * _skew(rng, 0.35), cpu_frac=0.50)
     tb.collective("barrier", group)
-    return tb.build()
+    return tb
 
 
-def ep_like(n_nodes: int, klass: str = "A", seed: int = 2) -> JobDependencyGraph:
-    """Embarrassingly-Parallel analogue: one huge CPU-bound block + reduces.
+def is_like(n_nodes: int, klass: str = "A", iterations: int = 4,
+            seed: int = 1) -> JobDependencyGraph:
+    """Integer-Sort analogue (§VII-B): memory-intensive, alltoall-heavy.
 
-    The paper's best case (heuristic 2.25x, ILP 2.78x at class C): long
-    independent compute with large cross-node skew means early finishers
-    idle for a long time unless their power moves to the stragglers.
+    Each iteration mirrors NPB IS ``rank()`` (paper Listing 1): bucket
+    count (compute) -> Allreduce -> key redistribution (compute) ->
+    Alltoall -> Alltoallv -> local ranking (compute).  cpu_frac is low
+    (memory-bound), so frequency boosts help moderately — the paper sees
+    modest IS speedups that improve with class size.
     """
+    return is_builder(n_nodes, klass, iterations, seed).build()
+
+
+def ep_builder(n_nodes: int, klass: str = "A",
+               seed: int = 2) -> TraceBuilder:
+    """The :func:`ep_like` op script as an unbuilt :class:`TraceBuilder`."""
     scale = NPB_CLASSES[klass]
     rng = random.Random(seed)
     tb = TraceBuilder(n_nodes)
@@ -271,18 +371,22 @@ def ep_like(n_nodes: int, klass: str = "A", seed: int = 2) -> JobDependencyGraph
         for node in range(n_nodes):
             tb.compute(node, 1.0 * scale * _skew(rng, 0.20), cpu_frac=0.90)
         tb.collective("allreduce", group)
-    return tb.build()
+    return tb
 
 
-def cg_like(n_nodes: int, klass: str = "A", iterations: int = 15,
-            seed: int = 3) -> JobDependencyGraph:
-    """Conjugate-Gradient analogue: communication-intensive halo exchanges.
+def ep_like(n_nodes: int, klass: str = "A", seed: int = 2) -> JobDependencyGraph:
+    """Embarrassingly-Parallel analogue: one huge CPU-bound block + reduces.
 
-    Many short compute blocks separated by neighbour send/recv and a
-    reduction per iteration.  Jobs are small relative to controller RTT, so
-    the debounced heuristic barely acts (paper Fig. 13: speedup ~= 1.0,
-    worst observed 0.98).
+    The paper's best case (heuristic 2.25x, ILP 2.78x at class C): long
+    independent compute with large cross-node skew means early finishers
+    idle for a long time unless their power moves to the stragglers.
     """
+    return ep_builder(n_nodes, klass, seed).build()
+
+
+def cg_builder(n_nodes: int, klass: str = "A", iterations: int = 15,
+               seed: int = 3) -> TraceBuilder:
+    """The :func:`cg_like` op script as an unbuilt :class:`TraceBuilder`."""
     scale = NPB_CLASSES[klass]
     rng = random.Random(seed)
     tb = TraceBuilder(n_nodes)
@@ -299,7 +403,19 @@ def cg_like(n_nodes: int, klass: str = "A", iterations: int = 15,
         for node in range(n_nodes):
             tb.compute(node, 0.5 * _skew(rng, 0.30), cpu_frac=0.65)
         tb.collective("allreduce", group)
-    return tb.build()
+    return tb
+
+
+def cg_like(n_nodes: int, klass: str = "A", iterations: int = 15,
+            seed: int = 3) -> JobDependencyGraph:
+    """Conjugate-Gradient analogue: communication-intensive halo exchanges.
+
+    Many short compute blocks separated by neighbour send/recv and a
+    reduction per iteration.  Jobs are small relative to controller RTT, so
+    the debounced heuristic barely acts (paper Fig. 13: speedup ~= 1.0,
+    worst observed 0.98).
+    """
+    return cg_builder(n_nodes, klass, iterations, seed).build()
 
 
 def pipeline_graph(stages: int, microbatches: int, fwd_work: float = 4.0,
@@ -406,16 +522,11 @@ def fork_join_graph(n_nodes: int, stages: int = 3, work: float = 8.0,
     return g
 
 
-def moe_step_graph(n_nodes: int, layers: int = 4, hot_factor: float = 2.5,
-                   seed: int = 5) -> JobDependencyGraph:
-    """An MoE training step: per-layer alltoall with hot-expert imbalance.
-
-    Node = expert-parallel rank.  Each layer: attention compute (balanced)
-    -> dispatch alltoall -> expert FFN compute (imbalanced: the rank
-    holding the hot expert gets ``hot_factor`` more work) -> combine
-    alltoall.  Final DP gradient allreduce.  This is the LM-workload face
-    of the paper's technique (see DESIGN.md §4).
-    """
+def moe_step_builder(n_nodes: int, layers: int = 4,
+                     hot_factor: float = 2.5,
+                     seed: int = 5) -> TraceBuilder:
+    """The :func:`moe_step_graph` op script as an unbuilt
+    :class:`TraceBuilder`."""
     rng = random.Random(seed)
     tb = TraceBuilder(n_nodes)
     group = list(range(n_nodes))
@@ -431,4 +542,17 @@ def moe_step_graph(n_nodes: int, layers: int = 4, hot_factor: float = 2.5,
     for node in range(n_nodes):
         tb.compute(node, 2.0, cpu_frac=0.5)
     tb.collective("allreduce", group)
-    return tb.build()
+    return tb
+
+
+def moe_step_graph(n_nodes: int, layers: int = 4, hot_factor: float = 2.5,
+                   seed: int = 5) -> JobDependencyGraph:
+    """An MoE training step: per-layer alltoall with hot-expert imbalance.
+
+    Node = expert-parallel rank.  Each layer: attention compute (balanced)
+    -> dispatch alltoall -> expert FFN compute (imbalanced: the rank
+    holding the hot expert gets ``hot_factor`` more work) -> combine
+    alltoall.  Final DP gradient allreduce.  This is the LM-workload face
+    of the paper's technique (see DESIGN.md §4).
+    """
+    return moe_step_builder(n_nodes, layers, hot_factor, seed).build()

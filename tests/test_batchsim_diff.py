@@ -67,11 +67,30 @@ LISTING2_CASES = [
     ("l2-random", listing2_random(4.0, seed=3), homogeneous_cluster(3),
      (4.0, 8.0)),
 ]
+def _trace_ingested(name, graph, specs, bounds, **record_kw):
+    """A case whose graph went through the full trace pipeline: record
+    -> serialise -> parse -> calibrate -> reconstruct (ISSUE 5
+    differential coverage — ingested graphs must obey the same
+    event/vector/jax envelopes as native ones)."""
+    from repro.traces import (dumps_trace, loads_trace, record_graph,
+                              reconstruct)
+
+    trace = loads_trace(dumps_trace(record_graph(graph, specs,
+                                                 **record_kw)))
+    recon = reconstruct(trace)
+    return (name, recon.graph, recon.specs, bounds)
+
+
 GENERATED_CASES = [
     ("ring-trace", ring_trace_graph(), homogeneous_cluster(3), (4.0, 8.0)),
     ("ep-het4", ep_like(4, "A"), heterogeneous_cluster(4), (6.0, 12.0)),
     ("cg-homo3", cg_like(3, "A"), homogeneous_cluster(3), (5.0, 9.0)),
     ("is-het3", is_like(3, "A"), heterogeneous_cluster(3), (6.0, 15.0)),
+    _trace_ingested("ingested-l2", listing2_graph(),
+                    homogeneous_cluster(3), (2.5, 9.0)),
+    _trace_ingested("ingested-ep4", ep_like(4, "A"),
+                    heterogeneous_cluster(4), (6.0, 12.0),
+                    freqs="random", seed=13),
 ]
 _ids = [c[0] for c in LISTING2_CASES + GENERATED_CASES]
 

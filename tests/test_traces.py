@@ -1,0 +1,593 @@
+"""Trace ingestion / calibration / replay subsystem (ISSUE 5).
+
+Covers the schema contract (strict loader), LUT calibration as the
+exact inverse of the execution-time model, the ingest↔reconstruct
+round-trip oracle over the workload zoo (noise-free: isomorphic graphs,
+work to 1e-9; noisy: structure survives, replay within the documented
+tolerance), the replay validator (wall clock vs re-simulation under the
+nominal bound), the bundled sample corpus sweeping on the batched
+backends with zero event fallbacks, the golden reconstructed-graph text
+fixture, graph text round-trips, and the ``python -m repro.traces`` CLI.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based tests skip without hypothesis
+    from _hyp_stub import given, settings, st
+
+from repro.backends.jax import HAS_JAX
+from repro.core import (JobDependencyGraph, ScenarioFamily, SweepEngine,
+                        ep_builder, fork_join_graph, heterogeneous_cluster,
+                        homogeneous_cluster, is_builder, layered_dag,
+                        listing2_graph, moe_step_builder, pipeline_graph,
+                        simulate)
+from repro.core.power import arndale_like_lut, job_time, NodeSpec
+from repro.traces import (NOISY_REPLAY_RTOL, REPLAY_RTOL, OpRecord,
+                          SpanRecord, Trace, TraceCorpus, TraceError,
+                          canonical_form, dumps_trace, graphs_match,
+                          load_trace, loads_trace, reconstruct,
+                          record_builder, record_graph, record_workload,
+                          replay_report, span_work, with_noise)
+from repro.traces.cli import main as cli_main
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SAMPLE_CORPUS = ROOT / "examples" / "traces"
+GOLDEN_TEXT = pathlib.Path(__file__).parent / "golden" / \
+    "trace_listing2.txt"
+
+
+def minimal_trace_text(**header_over):
+    header = {"record": "header", "version": 1, "ranks": 2,
+              "cluster": [{"lut": "arndale-5410", "speed": 1.0}] * 2}
+    header.update(header_over)
+    lines = [json.dumps(header)]
+    for rank in range(2):
+        lines.append(json.dumps(
+            {"record": "span", "rank": rank, "seq": 0, "t0": 0.0,
+             "t1": 1.0, "f": 1600.0, "rho": 1.0}))
+    return "\n".join(lines) + "\n"
+
+
+# ------------------------------------------------------------------ schema
+class TestSchema:
+    def test_minimal_trace_loads(self):
+        trace = loads_trace(minimal_trace_text())
+        assert trace.ranks == 2
+        assert len(trace.spans()) == 2
+        assert trace.wall_clock == 1.0
+
+    def test_missing_header_rejected(self):
+        with pytest.raises(TraceError, match="no header"):
+            loads_trace("")
+        with pytest.raises(TraceError, match="before the header"):
+            loads_trace('{"record": "span", "rank": 0, "seq": 0, '
+                        '"t0": 0, "t1": 1, "f": 1600}')
+
+    def test_unsupported_version_rejected(self):
+        with pytest.raises(TraceError, match="version"):
+            loads_trace(minimal_trace_text(version=99))
+
+    def test_cluster_size_must_match_ranks(self):
+        with pytest.raises(TraceError, match="cluster"):
+            loads_trace(minimal_trace_text(cluster=[
+                {"lut": "arndale-5410"}]))
+
+    def test_rank_out_of_range_rejected(self):
+        bad = minimal_trace_text() + json.dumps(
+            {"record": "span", "rank": 7, "seq": 1, "t0": 1, "t1": 2,
+             "f": 1600})
+        with pytest.raises(TraceError, match="out of range"):
+            loads_trace(bad)
+
+    @pytest.mark.parametrize("op, msg", [
+        ({"kind": "frobnicate"}, "unknown op kind"),
+        ({"kind": "send", "peer": 9}, "peer out of range"),
+        ({"kind": "send", "peer": 0}, "to self"),
+        ({"kind": "allreduce"}, "without a group"),
+        ({"kind": "allreduce", "group": [0, 9]}, "out of range"),
+        ({"kind": "allreduce", "group": [1]}, "outside its own"),
+        ({"kind": "wait"}, "without a request"),
+    ])
+    def test_malformed_ops_rejected(self, op, msg):
+        bad = minimal_trace_text() + json.dumps(
+            {"record": "op", "rank": 0, "seq": 1, "t": 1.0, **op})
+        with pytest.raises(TraceError, match=msg):
+            loads_trace(bad)
+
+    def test_duplicate_seq_rejected(self):
+        bad = minimal_trace_text() + json.dumps(
+            {"record": "span", "rank": 0, "seq": 0, "t0": 1, "t1": 2,
+             "f": 1600})
+        with pytest.raises(TraceError, match="duplicate seq"):
+            loads_trace(bad)
+
+    def test_backwards_time_strict_vs_lenient(self):
+        bad = minimal_trace_text() + json.dumps(
+            {"record": "span", "rank": 0, "seq": 1, "t0": 0.2,
+             "t1": 0.5, "f": 1600})
+        with pytest.raises(TraceError, match="backwards"):
+            loads_trace(bad)
+        assert loads_trace(bad, strict=False).ranks == 2
+
+    def test_unwaited_nonblocking_rejected(self):
+        bad = minimal_trace_text() + json.dumps(
+            {"record": "op", "rank": 0, "seq": 1, "t": 1.0,
+             "kind": "send", "peer": 1, "req": "r1"})
+        with pytest.raises(TraceError, match="never waited"):
+            loads_trace(bad)
+
+    def test_serialisation_is_canonical(self):
+        trace = record_workload("listing2")
+        text = dumps_trace(trace)
+        assert dumps_trace(loads_trace(text)) == text
+
+    @pytest.mark.parametrize("header", [
+        {"ranks": "three"},
+        {"cluster": [3, 3]},
+        {"cluster": [{"lut": "arndale-5410", "speed": "fast"}] * 2},
+        {"version": "one"},
+    ])
+    def test_malformed_header_fields_raise_trace_error(self, header):
+        """Type errors in header fields stay inside the TraceError
+        family (the strict-loader contract the CLI relies on)."""
+        with pytest.raises(TraceError):
+            loads_trace(minimal_trace_text(**header))
+
+    def test_idle_rank_still_gets_a_node(self):
+        """A rank that logged nothing must still appear in the graph —
+        positional specs lookups (replay, simulators) would otherwise
+        pair every later rank with the wrong cluster entry."""
+        header = {"record": "header", "version": 1, "ranks": 3,
+                  "cluster": [{"lut": "arndale-5410"},
+                              {"lut": "odroid-xu2"},
+                              {"lut": "arndale-5410", "speed": 2.0}]}
+        recs = [header,
+                {"record": "span", "rank": 0, "seq": 0, "t0": 0.0,
+                 "t1": 2.0, "f": 1600.0},
+                # rank 1 idle: no records at all
+                {"record": "span", "rank": 2, "seq": 0, "t0": 0.0,
+                 "t1": 2.0, "f": 1600.0}]
+        recon = reconstruct(loads_trace("\n".join(json.dumps(r)
+                                                  for r in recs)))
+        assert recon.graph.nodes == [0, 1, 2]
+        assert recon.graph[(1, 0)].work == 0.0
+        report = replay_report(recon, simulate_nominal=False)
+        assert report.ok and report.rel_err < 1e-9, str(report)
+
+
+# -------------------------------------------------------------- calibration
+class TestCalibration:
+    def test_inverts_execution_time_at_every_state(self):
+        """work -> duration (job_time) -> work (span_work) is identity
+        at every LUT state, any cpu_frac — THE calibration contract."""
+        from repro.core.graph import Job
+
+        spec = NodeSpec(arndale_like_lut(), speed=1.3)
+        for freq in [s.freq_mhz for s in spec.lut.states]:
+            for rho in (0.0, 0.4, 1.0):
+                job = Job(node=0, index=0, work=7.5, cpu_frac=rho)
+                dur = job_time(job, freq, spec.lut.f_max, spec.speed)
+                span = SpanRecord(rank=0, seq=0, t0=1.0, t1=1.0 + dur,
+                                  freq_mhz=freq, cpu_frac=rho)
+                assert span_work(span, spec) == pytest.approx(7.5,
+                                                              rel=1e-12)
+
+    def test_unknown_frequency_strict_raises_lenient_snaps(self):
+        spec = NodeSpec(arndale_like_lut())
+        span = SpanRecord(rank=0, seq=0, t0=0.0, t1=2.0,
+                          freq_mhz=1234.5, cpu_frac=1.0)
+        with pytest.raises(TraceError, match="not a state"):
+            span_work(span, spec)
+        snapped = span_work(span, spec, strict=False)  # snaps to 1200
+        assert snapped == pytest.approx(2.0 * 1200.0 / 1600.0)
+
+    def test_unknown_lut_name_needs_explicit_specs(self):
+        text = minimal_trace_text(cluster=[{"lut": "mystery"}] * 2)
+        trace = loads_trace(text)
+        with pytest.raises(TraceError, match="unknown LUT"):
+            reconstruct(trace)
+        recon = reconstruct(trace,
+                            specs=[NodeSpec(arndale_like_lut())] * 2)
+        assert len(recon.graph) == 2
+
+
+# ------------------------------------------------------- round-trip oracle
+def zoo_cases():
+    """(id, ground-truth graph, specs, recorder) across both recorders,
+    clusters, and frequency plans."""
+    is_tb = is_builder(4, "A", seed=1)
+    ep_tb = ep_builder(4, "A", seed=2)
+    moe_tb = moe_step_builder(4, seed=5)
+    het4 = heterogeneous_cluster(4, seed=0)
+    return [
+        ("listing2", listing2_graph(), homogeneous_cluster(3),
+         lambda g, s: record_graph(g, s)),
+        ("npb-is-random-f", is_tb.build(), het4,
+         lambda g, s: record_builder(is_builder(4, "A", seed=1), s,
+                                     freqs="random", seed=9)),
+        ("npb-ep", ep_tb.build(), homogeneous_cluster(4),
+         lambda g, s: record_builder(ep_builder(4, "A", seed=2), s)),
+        ("moe", moe_tb.build(), homogeneous_cluster(4),
+         lambda g, s: record_builder(moe_step_builder(4, seed=5), s)),
+        ("forkjoin", fork_join_graph(4, stages=3, seed=7),
+         homogeneous_cluster(4),
+         lambda g, s: record_graph(g, s, freqs="random", seed=3)),
+        ("layered", layered_dag(5, layers=4, seed=6),
+         homogeneous_cluster(5), lambda g, s: record_graph(g, s)),
+        ("pipeline", pipeline_graph(3, 4, seed=4),
+         homogeneous_cluster(3), lambda g, s: record_graph(g, s)),
+    ]
+
+
+def strip_redundant_deps(graph: JobDependencyGraph) -> JobDependencyGraph:
+    """Drop same-node deps other than the serial predecessor — they are
+    transitively implied by the serial chain and (documented in
+    repro.traces.record) have no trace representation.  Only the
+    pipeline generator emits such edges."""
+    g = JobDependencyGraph()
+    for jid in sorted(graph.jobs):
+        job = graph[jid]
+        deps = [d for d in job.deps
+                if d[0] != job.node or d == (job.node, job.index - 1)]
+        g.add(job.node, job.index, job.work, deps=deps,
+              cpu_frac=job.cpu_frac, tag=job.tag)
+    return g
+
+
+class TestRoundTripOracle:
+    @pytest.mark.parametrize("case", zoo_cases(),
+                             ids=[c[0] for c in zoo_cases()])
+    def test_noise_free_reconstruction_is_isomorphic(self, case):
+        """The acceptance criterion: same edges, work within 1e-9,
+        through serialise -> parse -> calibrate -> reconstruct."""
+        _, graph, specs, recorder = case
+        trace = loads_trace(dumps_trace(recorder(graph, specs)))
+        recon = reconstruct(trace)
+        assert recon.report.clean
+        assert graphs_match(strip_redundant_deps(graph), recon.graph,
+                            work_rtol=1e-9)
+        # stripping is a no-op for every generator except the pipeline
+        if case[0] != "pipeline":
+            assert graphs_match(graph, recon.graph, work_rtol=1e-9)
+
+    @pytest.mark.parametrize("case", zoo_cases()[:4],
+                             ids=[c[0] for c in zoo_cases()[:4]])
+    def test_replay_matches_wall_clock_within_1pct(self, case):
+        _, graph, specs, recorder = case
+        recon = reconstruct(recorder(graph, specs))
+        report = replay_report(recon, tol=REPLAY_RTOL)
+        assert report.ok, str(report)
+        assert report.rel_err < 1e-9  # noise-free is exact, not just 1%
+
+    def test_nominal_recording_wall_clock_is_nominal_makespan(self):
+        g = listing2_graph()
+        trace = record_graph(g, homogeneous_cluster(3))
+        assert trace.wall_clock == pytest.approx(
+            g.makespan(lambda j: j.work), rel=1e-12)
+
+    def test_nominal_replay_cross_checks_event_simulator(self):
+        recon = reconstruct(record_graph(listing2_graph(),
+                                         homogeneous_cluster(3)))
+        report = replay_report(recon)
+        assert report.sim_makespan_s == pytest.approx(19.0, rel=1e-9)
+
+    def test_random_freq_recording_stretches_wall_clock(self):
+        """A trace recorded at low DVFS states must calibrate *down* to
+        the same work, not inherit the stretched durations."""
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        trace = record_graph(g, specs, freqs="random", seed=11)
+        assert trace.wall_clock > g.makespan(lambda j: j.work)
+        recon = reconstruct(trace)
+        assert graphs_match(g, recon.graph)
+        assert replay_report(recon).ok
+
+
+class TestNoiseResilience:
+    def test_jitter_and_skew_keep_structure(self):
+        """seq order is authoritative: pure timestamp noise cannot change
+        the reconstructed structure, only the calibrated works."""
+        g = is_builder(4, "A", seed=1).build()
+        specs = heterogeneous_cluster(4, seed=0)
+        trace = record_builder(is_builder(4, "A", seed=1), specs)
+        noisy = with_noise(trace, jitter_s=0.02, skew_s=0.1, seed=5)
+        recon = reconstruct(noisy, strict=False)
+        shape = [(r, p, f, d) for r, p, _w, f, d in canonical_form(g)]
+        got = [(r, p, f, d) for r, p, _w, f, d
+               in canonical_form(recon.graph)]
+        assert got == shape
+
+    def test_default_noise_replay_within_documented_tolerance(self):
+        """Acceptance: default jitter/skew noise still replay-validates
+        within NOISY_REPLAY_RTOL."""
+        for seed in range(3):
+            trace = record_builder(is_builder(4, "A", seed=1),
+                                   heterogeneous_cluster(4, seed=0))
+            noisy = with_noise(trace, seed=seed)   # default noise model
+            report = replay_report(reconstruct(noisy, strict=False),
+                                   tol=NOISY_REPLAY_RTOL)
+            assert report.ok, f"seed {seed}: {report}"
+
+    def test_dropped_records_reconstruct_leniently(self):
+        trace = record_builder(is_builder(4, "A", seed=1),
+                               homogeneous_cluster(4))
+        noisy = with_noise(trace, drop=0.05, seed=4)
+        assert noisy.meta["noise"]["dropped"] > 0
+        with pytest.raises((TraceError, ValueError)):
+            reconstruct(loads_trace(dumps_trace(noisy)))  # strict
+        recon = reconstruct(noisy, strict=False)
+        assert len(recon.graph) > 0
+        assert not recon.report.clean or \
+            len(recon.graph) < len(trace.spans())
+
+    def test_noisy_trace_strict_load_rejected(self):
+        trace = record_workload("listing2")
+        noisy = with_noise(trace, jitter_s=0.5, seed=1)
+        with pytest.raises(TraceError, match="backwards"):
+            loads_trace(dumps_trace(noisy))
+
+    def test_heavy_jitter_never_deletes_edges(self):
+        """The causality filter must not fire on a cleanly-matched
+        trace: even jitter far beyond CAUSAL_SLACK_S leaves the
+        structure exact (seq order is authoritative)."""
+        g = listing2_graph()
+        trace = record_graph(g, homogeneous_cluster(3))
+        noisy = with_noise(trace, jitter_s=0.2, skew_s=0.3, seed=8)
+        recon = reconstruct(noisy, strict=False)
+        assert recon.report.dropped_acausal == 0
+        shape = [(r, p, d) for r, p, _w, _f, d in canonical_form(g)]
+        got = [(r, p, d) for r, p, _w, _f, d
+               in canonical_form(recon.graph)]
+        assert got == shape
+
+
+class TestNonblockingOps:
+    def test_isend_irecv_wait_attachment(self):
+        """isend produces from the job before the *post*; irecv's child
+        is the job after the *wait*."""
+        header = {"record": "header", "version": 1, "ranks": 2,
+                  "cluster": [{"lut": "arndale-5410"}] * 2}
+        recs = [header,
+                # rank 0: compute A, isend posted, compute B, wait
+                {"record": "span", "rank": 0, "seq": 0, "t0": 0.0,
+                 "t1": 2.0, "f": 1600.0},
+                {"record": "op", "rank": 0, "seq": 1, "t": 2.0,
+                 "kind": "send", "peer": 1, "req": "s1"},
+                {"record": "span", "rank": 0, "seq": 2, "t0": 2.0,
+                 "t1": 5.0, "f": 1600.0},
+                {"record": "op", "rank": 0, "seq": 3, "t": 5.0,
+                 "kind": "wait", "req": "s1"},
+                {"record": "span", "rank": 0, "seq": 4, "t0": 5.0,
+                 "t1": 6.0, "f": 1600.0},
+                # rank 1: irecv posted, compute C, wait, compute D
+                {"record": "op", "rank": 1, "seq": 0, "t": 0.0,
+                 "kind": "recv", "peer": 0, "req": "r1"},
+                {"record": "span", "rank": 1, "seq": 1, "t0": 0.0,
+                 "t1": 1.0, "f": 1600.0},
+                {"record": "op", "rank": 1, "seq": 2, "t": 2.0,
+                 "kind": "wait", "req": "r1"},
+                {"record": "span", "rank": 1, "seq": 3, "t0": 2.0,
+                 "t1": 4.0, "f": 1600.0}]
+        trace = loads_trace("\n".join(json.dumps(r) for r in recs))
+        recon = reconstruct(trace)
+        # rank 1's post-wait job depends on rank 0's pre-post job
+        assert (0, 0) in recon.graph[(1, 1)].deps
+        assert recon.report.clean
+
+    def test_isend_keeps_non_overtaking_order(self):
+        """An isend posted before a blocking send to the same peer
+        matches the peer's FIRST recv, even though its wait comes after
+        the blocking send (MPI non-overtaking order)."""
+        header = {"record": "header", "version": 1, "ranks": 2,
+                  "cluster": [{"lut": "arndale-5410"}] * 2}
+        recs = [header,
+                # rank 0: span A, isend post, span B, blocking send,
+                # span C, wait
+                {"record": "span", "rank": 0, "seq": 0, "t0": 0.0,
+                 "t1": 1.0, "f": 1600.0},
+                {"record": "op", "rank": 0, "seq": 1, "t": 1.0,
+                 "kind": "send", "peer": 1, "req": "s1"},
+                {"record": "span", "rank": 0, "seq": 2, "t0": 1.0,
+                 "t1": 2.0, "f": 1600.0},
+                {"record": "op", "rank": 0, "seq": 3, "t": 2.0,
+                 "kind": "send", "peer": 1},
+                {"record": "span", "rank": 0, "seq": 4, "t0": 2.0,
+                 "t1": 3.0, "f": 1600.0},
+                {"record": "op", "rank": 0, "seq": 5, "t": 3.0,
+                 "kind": "wait", "req": "s1"},
+                {"record": "span", "rank": 0, "seq": 6, "t0": 3.0,
+                 "t1": 4.0, "f": 1600.0},
+                # rank 1: recv, span X, recv, span Y
+                {"record": "op", "rank": 1, "seq": 0, "t": 1.0,
+                 "kind": "recv", "peer": 0},
+                {"record": "span", "rank": 1, "seq": 1, "t0": 1.0,
+                 "t1": 2.5, "f": 1600.0},
+                {"record": "op", "rank": 1, "seq": 2, "t": 2.5,
+                 "kind": "recv", "peer": 0},
+                {"record": "span", "rank": 1, "seq": 3, "t0": 2.5,
+                 "t1": 3.5, "f": 1600.0}]
+        recon = reconstruct(loads_trace("\n".join(json.dumps(r)
+                                                  for r in recs)))
+        # first recv's job X <- isend's pre-post job A (0,0);
+        # second recv's job Y <- blocking send's producer B (0,1)
+        assert (0, 0) in recon.graph[(1, 0)].deps
+        assert (0, 1) in recon.graph[(1, 1)].deps
+        assert recon.report.clean
+
+    def test_duplicate_pending_req_rejected_strict(self):
+        bad = minimal_trace_text() + "\n".join(json.dumps(r) for r in [
+            {"record": "op", "rank": 0, "seq": 1, "t": 1.0,
+             "kind": "recv", "peer": 1, "req": "r"},
+            {"record": "op", "rank": 0, "seq": 2, "t": 1.0,
+             "kind": "recv", "peer": 1, "req": "r"},
+            {"record": "op", "rank": 0, "seq": 3, "t": 1.0,
+             "kind": "wait", "req": "r"}])
+        with pytest.raises(TraceError, match="still pending"):
+            loads_trace(bad)
+
+    def test_dropped_wait_tolerated_leniently(self):
+        """Record loss can orphan a req post (or its wait): strict load
+        rejects, lenient load + reconstruction survive."""
+        unwaited = minimal_trace_text() + json.dumps(
+            {"record": "op", "rank": 0, "seq": 1, "t": 1.0,
+             "kind": "recv", "peer": 1, "req": "r1"})
+        orphan_wait = minimal_trace_text() + json.dumps(
+            {"record": "op", "rank": 0, "seq": 1, "t": 1.0,
+             "kind": "wait", "req": "ghost"})
+        for text in (unwaited, orphan_wait):
+            with pytest.raises(TraceError):
+                loads_trace(text)
+            trace = loads_trace(text, strict=False)
+            recon = reconstruct(trace, strict=False)
+            assert len(recon.graph) >= 2
+
+
+# ---------------------------------------------------- corpus + sweep (accept)
+class TestSampleCorpus:
+    def test_bundled_corpus_loads_and_validates(self):
+        corpus = TraceCorpus.from_dir(SAMPLE_CORPUS)
+        assert corpus.names == ["listing2", "npb_is_a4"]
+        for report in corpus.validate():
+            assert report.ok and report.rel_err < 1e-9, str(report)
+            assert report.sim_makespan_s is not None
+
+    def test_bundled_listing2_is_the_paper_graph(self):
+        corpus = TraceCorpus.from_dir(SAMPLE_CORPUS)
+        entry = {e.name: e for e in corpus}["listing2"]
+        assert graphs_match(listing2_graph(), entry.recon.graph)
+
+    def test_corpus_sweep_vector_zero_fallbacks(self):
+        """Acceptance: the bundled corpus runs on the vector executor
+        with zero event fallbacks and matches per-cell event runs."""
+        fam = ScenarioFamily.from_corpus(SAMPLE_CORPUS)
+        cells = fam.scenarios()
+        sweep = SweepEngine(executor="vector").run(cells)
+        assert not sweep.failures
+        assert not sweep.event_fallbacks()
+        assert all(r.backend == "vector" for r in sweep.records)
+        for rec in sweep.records:
+            s = rec.scenario
+            ev = simulate(s.graph, s.specs, s.bound_w, s.policy)
+            assert rec.result.makespan == pytest.approx(ev.makespan,
+                                                        abs=0.1)
+
+    @pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+    def test_corpus_sweep_jax_zero_fallbacks(self):
+        fam = ScenarioFamily.from_corpus(SAMPLE_CORPUS)
+        sweep = SweepEngine(executor="jax").run(fam.scenarios())
+        assert not sweep.failures
+        assert not sweep.event_fallbacks()
+        assert all(r.backend == "jax" for r in sweep.records)
+
+    def test_in_memory_corpus(self):
+        corpus = TraceCorpus.from_traces(
+            [record_workload("listing2"),
+             record_workload("npb-cg", n_nodes=3, seed=2)])
+        assert len(corpus.family().scenarios()) == 12
+
+    def test_in_memory_corpus_dedupes_repeated_workloads(self):
+        """Repeated workloads must not collide on member names (they
+        would alias every SweepResult lookup)."""
+        corpus = TraceCorpus.from_traces(
+            [record_workload("npb-cg", n_nodes=3, seed=2),
+             record_workload("npb-cg", n_nodes=4, seed=3),
+             record_workload("listing2")])
+        assert corpus.names == ["npb-cg", "npb-cg-2", "listing2"]
+
+    def test_empty_dir_rejected(self, tmp_path):
+        with pytest.raises(TraceError, match="no .*traces"):
+            TraceCorpus.from_dir(tmp_path)
+
+
+# ------------------------------------------------------------ golden fixture
+class TestGoldenTraceGraph:
+    def test_reconstructed_listing2_matches_golden_text(self):
+        recon = reconstruct(load_trace(SAMPLE_CORPUS / "listing2.jsonl"))
+        assert recon.graph.to_text() == GOLDEN_TEXT.read_text(), \
+            "reconstruction drifted from tests/golden/trace_listing2.txt"
+
+    def test_golden_text_parses_back_to_the_same_graph(self):
+        g = JobDependencyGraph.from_text(GOLDEN_TEXT.read_text())
+        assert graphs_match(g, listing2_graph())
+
+
+# ------------------------------------------------- graph text round-trips
+class TestGraphTextRoundTrip:
+    @pytest.mark.parametrize("case", zoo_cases(),
+                             ids=[c[0] for c in zoo_cases()])
+    def test_zoo_graphs_round_trip(self, case):
+        _, graph, _, _ = case
+        g2 = JobDependencyGraph.from_text(graph.to_text())
+        assert graphs_match(graph, g2, work_rtol=1e-8)
+        assert {j: graph[j].tag for j in graph.jobs} == \
+            {j: g2[j].tag for j in g2.jobs}
+        # the text form is a fixed point after one round trip
+        assert g2.to_text() == \
+            JobDependencyGraph.from_text(g2.to_text()).to_text()
+
+    @given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                              allow_nan=False), min_size=5, max_size=5),
+           st.integers(min_value=0, max_value=10 ** 6))
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_property(self, works, seed):
+        """to_text/from_text preserves structure exactly and work to
+        %.9g precision on randomized layered graphs."""
+        import random as _random
+
+        rng = _random.Random(seed)
+        g = JobDependencyGraph()
+        for k, w in enumerate(works):
+            deps = [(0, k - 1)] if k > 0 else []
+            g.add(0, k, w, deps=deps, cpu_frac=rng.uniform(0.0, 1.0),
+                  tag=rng.choice(["", "send", "allreduce"]))
+        g2 = JobDependencyGraph.from_text(g.to_text())
+        assert graphs_match(g, g2, work_rtol=1e-8)
+
+
+# ---------------------------------------------------------------------- CLI
+class TestCLI:
+    def test_record_validate_convert_sweep(self, tmp_path, capsys):
+        out = tmp_path / "t.jsonl"
+        assert cli_main(["record", "--workload", "npb-cg", "--nodes",
+                         "3", "--seed", "2", "-o", str(out)]) == 0
+        assert cli_main(["validate", str(out)]) == 0
+        assert cli_main(["convert", str(out), "-o",
+                         str(tmp_path / "g.txt")]) == 0
+        g = JobDependencyGraph.from_text(
+            (tmp_path / "g.txt").read_text())
+        assert len(g.nodes) == 3
+        bench = tmp_path / "bench.json"
+        assert cli_main(["sweep", str(tmp_path), "--backend", "vector",
+                         "--bench-json", str(bench)]) == 0
+        payload = json.loads(bench.read_text())
+        assert payload["cells"] == len(payload["rows"]) > 0
+        capsys.readouterr()
+
+    def test_validate_fails_on_garbage(self, tmp_path, capsys):
+        bad = tmp_path / "bad.jsonl"
+        bad.write_text("not json\n")
+        assert cli_main(["validate", str(bad)]) == 1
+        capsys.readouterr()
+
+    def test_validate_reports_unmatched_comm_as_invalid(self, tmp_path,
+                                                        capsys):
+        """A schema-valid trace whose sends never match a recv must be
+        reported per-file as INVALID, not crash the CLI."""
+        bad = tmp_path / "unmatched.jsonl"
+        bad.write_text(minimal_trace_text() + json.dumps(
+            {"record": "op", "rank": 0, "seq": 1, "t": 1.0,
+             "kind": "send", "peer": 1}) + "\n")
+        assert cli_main(["validate", str(bad)]) == 1
+        assert "INVALID" in capsys.readouterr().out
+        assert cli_main(["convert", str(bad)]) == 1
+        capsys.readouterr()
+
+    def test_record_to_stdout(self, capsys):
+        assert cli_main(["record", "--workload", "listing2"]) == 0
+        text = capsys.readouterr().out
+        assert loads_trace(text).ranks == 3
