@@ -118,6 +118,11 @@ def main(quick: bool = False, backend: str = "event") -> List[str]:
                           "us_per_cell": t_batched * 1e6 / cells,
                           "batches": n_batches,
                           "max_makespan_diff_vs_event": maxdiff}
+        if sweep.profile is not None:
+            # steady-state compile/run/transfer split (post warm-up)
+            prof = sweep.profile.to_dict()
+            prof.pop("buckets")
+            bench[backend]["profile"] = prof
         out.append(csv_line(f"family_{backend}",
                             t_batched * 1e6 / cells,
                             f"speedup={speedup:.1f}x;cells={cells};"

@@ -50,7 +50,7 @@ def main(argv=None) -> int:
 
     from . import (depth_tables, family_sweep, fig8_power_sweep,
                    fig9_stddev_sweep, lm_workloads, npb_analogues,
-                   roofline_report, trace_replay)
+                   roofline_report, sharded_sweep, trace_replay)
 
     benches = {
         "depth_tables": depth_tables.main,        # Tables I & II
@@ -58,6 +58,7 @@ def main(argv=None) -> int:
         "fig9": fig9_stddev_sweep.main,           # Fig. 9
         "npb": npb_analogues.main,                # Figs. 11-13
         "family": family_sweep.main,              # mixed scenario families
+        "sharded": sharded_sweep.main,            # multi-device scaling
         "trace-replay": trace_replay.main,        # corpus ingest + sweep
         "lm_workloads": lm_workloads.main,        # pipeline/MoE graphs
         "roofline": roofline_report.main,         # §Roofline table

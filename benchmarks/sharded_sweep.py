@@ -1,0 +1,129 @@
+"""Sharded sweep executor: per-device-count scaling + pipeline overlap.
+
+Runs the :mod:`benchmarks.family_sweep` scenario grid through the jax
+executor at increasing shard widths (1 / 2 / 4 devices, clamped to
+what the mesh exposes) and reports
+
+* **scaling efficiency** per device count — ``t_1 / (d * t_d)``, the
+  fraction of perfect linear speedup the row-sharded stepper achieves
+  (CPU "devices" share cores, so CI numbers gauge overhead, not true
+  accelerator scaling),
+* the **compile / run / transfer split** from the profiling layer
+  (timed runs follow a warm-up run, so compile time lands in the
+  warm-up and the steady-state split is what the numbers show),
+* the **async pipeline win**: wall-clock with host packing overlapped
+  against device compute (``pipeline=True``) vs the sequential
+  dispatch-then-fetch bucket loop.
+
+The device count is fixed at process start: the CI ``sharded`` job
+exports ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` and
+uploads the record as ``BENCH_shard.json``; when this bench is first
+to touch jax in the process it forces the same 4-device mesh itself.
+Like the family bench, the grid must batch completely — any event
+fallback is an error.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import List
+
+from .common import BENCH_RECORDS, csv_line
+from .family_sweep import EXACT_POLICIES, build_family_scenarios
+
+
+def _force_mesh() -> None:
+    """Ask for a 4-device host platform when jax is not yet loaded."""
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def main(quick: bool = False) -> List[str]:
+    from repro.backends.jax import HAS_JAX
+
+    if not HAS_JAX:
+        print("sharded sweep: jax not installed, skipping "
+              "(pip install -e .[jax])")
+        return [csv_line("sharded", 0.0, "SKIPPED(no-jax)")]
+    _force_mesh()
+    import jax
+
+    from repro.core import SweepEngine
+
+    avail = len(jax.devices())
+    counts = [d for d in (1, 2, 4) if d <= avail] or [1]
+    scenarios = build_family_scenarios(quick)
+    cells = len(scenarios)
+    print(f"sharded sweep: {cells} cells, {avail} devices, "
+          f"shard widths {counts}")
+
+    bench = {"devices_available": avail, "cells": cells,
+             "policies": sorted({s.policy_key for s in scenarios}),
+             "per_device": {}}
+    out: List[str] = []
+    walls = {}
+    baseline = None
+    for d in counts:
+        engine = SweepEngine(executor="jax", shard_devices=d)
+        engine.run(scenarios)                 # compile warm-up per bucket
+        t0 = time.perf_counter()
+        sweep = engine.run(scenarios)
+        wall = time.perf_counter() - t0
+        if sweep.failures:
+            raise RuntimeError(f"d={d} failures: "
+                               f"{[(r.scenario.name, r.error) for r in sweep.failures]}")
+        if sweep.event_fallbacks():
+            raise RuntimeError(f"d={d}: cells fell back to the event "
+                               f"simulator — the family must batch")
+        walls[d] = wall
+        eff = walls[counts[0]] / (d * wall)
+        prof = sweep.profile.to_dict()
+        prof.pop("buckets")                   # per-bucket detail is noise
+        print(f"  d={d}: {wall:.3f}s  efficiency {eff:.2f}  "
+              f"[{sweep.profile.summary()}]")
+        bench["per_device"][str(d)] = {
+            "wall_s": wall, "us_per_cell": wall * 1e6 / cells,
+            "scaling_efficiency": eff, "profile": prof}
+        out.append(csv_line(f"sharded_d{d}", wall * 1e6 / cells,
+                            f"eff={eff:.2f};cells={cells}"))
+        if baseline is None:
+            baseline = sweep
+        else:
+            maxdiff = max(
+                abs(a.result.makespan - b.result.makespan)
+                for a, b in zip(baseline.records, sweep.records)
+                if a.scenario.policy_key in EXACT_POLICIES)
+            bench["per_device"][str(d)]["max_makespan_diff_vs_d1"] = \
+                maxdiff
+            if maxdiff > 0.0:
+                raise RuntimeError(f"d={d}: sharded results diverged "
+                                   f"from single-device by {maxdiff}")
+
+    # Pipeline overlap at the widest mesh: packing bucket k+1 on the
+    # host while bucket k computes, vs the sequential bucket loop.
+    d = counts[-1]
+    seq = SweepEngine(executor="jax", shard_devices=d, pipeline=False)
+    seq.run(scenarios)                        # warm-up
+    t0 = time.perf_counter()
+    seq.run(scenarios)
+    t_seq = time.perf_counter() - t0
+    overlap = t_seq / walls[d]
+    print(f"  pipeline: overlapped {walls[d]:.3f}s vs sequential "
+          f"{t_seq:.3f}s  ({overlap:.2f}x)")
+    bench["pipeline"] = {"devices": d, "overlapped_wall_s": walls[d],
+                         "sequential_wall_s": t_seq,
+                         "overlap_speedup": overlap}
+    out.append(csv_line("sharded_pipeline", walls[d] * 1e6 / cells,
+                        f"seq_vs_pipe={overlap:.2f}x;d={d}"))
+    BENCH_RECORDS["sharded_sweep"] = bench
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,8 @@ def jax_available() -> bool:
 _LAZY = {
     "JaxBatchSimulator": "engine",
     "simulate_batch_jax": "engine",
+    "shard_count": "engine",
+    "stepper_cache_size": "engine",
     "JaxPolicy": "policy_fns",
     "get_jax_policy": "policy_fns",
     "has_jax_policy": "policy_fns",

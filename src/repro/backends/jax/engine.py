@@ -35,22 +35,44 @@ remaining-work epsilon, so float32 cannot livelock a lane; the
 differential suite holds the results to the same ``2*dt`` makespan / 1%
 energy envelopes as the numpy backend.
 
-The jitted stepper is a module-level function keyed only on array
-shapes and static policy config, so same-shape batches — every bucket
-of a sweep grid — share one compilation; the sweep engine's
+The jitted steppers are module-level functions keyed only on array
+shapes and static policy/shard config, so same-shape batches — every
+bucket of a sweep grid — share one compilation; the sweep engine's
 power-of-two padding envelopes make repeated mixed-family sweeps hit
-the same cache.
+the same cache (:func:`stepper_cache_size` exposes the cache growth the
+profiling layer reports).
+
+**Sharding**: with more than one visible device the batch row axis is
+partitioned across a 1-D ``("rows",)`` mesh with
+``jax.experimental.shard_map`` — each device runs the vmapped
+``while_loop`` on its own row shard *independently* (no per-wave
+cross-device reduction: a shard whose rows finish early simply idles).
+The row axis is padded to a shard multiple by replicating the last row
+(results trimmed on fetch), bounds/schedules/policy state are
+partitioned, and the geometry is partitioned (stacked layout) or
+replicated (shared layout).  With one device the dispatch transparently
+takes the original single-device vmap path.
+
+**Async dispatch**: :meth:`JaxBatchSimulator.dispatch` returns as soon
+as the stepper is enqueued (jax dispatch is asynchronous), so the sweep
+engine packs and dispatches bucket *k+1* while bucket *k* computes;
+:meth:`JaxBatchSimulator.fetch` then blocks and pulls the whole output
+pytree to the host in ONE fused transfer (``jax.device_get``), never
+one sync per field.  ``run()`` is ``fetch(dispatch())``.
 """
 
 from __future__ import annotations
 
 import functools
 import math
+import time
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.batchsim import (BatchArrays, GraphArrays,
                                  build_graph_arrays, pad_bound_schedules,
@@ -58,13 +80,19 @@ from repro.core.batchsim import (BatchArrays, GraphArrays,
 from repro.core.graph import JobDependencyGraph
 from repro.core.power import NodeSpec
 from repro.core.simulator import OVER_BUDGET_RTOL, SimResult
-from repro.kernels.power_step import (BIG_TIME, StepTables, power_step,
+from repro.kernels.power_step import (BIG_TIME, StepTables,
+                                      default_interpret, power_step,
                                       step_tables)
 
 from .policy_fns import JaxPolicy, _JAX_REGISTRY, get_jax_policy
+from .profile import BucketProfile
 
 #: Anything above this is "no event" (see power_step's BIG_TIME).
 _BIG_CUT = BIG_TIME * 0.5
+
+#: Single fused device-to-host fetch (module alias so the one-sync-per-
+#: run regression test can count calls).
+_device_get = jax.device_get
 
 
 class _Ctx(NamedTuple):
@@ -270,13 +298,16 @@ def _row_loop(ctx: _Ctx, bound, sched_t, sched_w, pol_state, *,
     }
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("policy_name", "wants_ticks", "redistribute",
-                     "max_steps", "impl", "interpret", "stacked"))
-def _run_batch(ctx: _Ctx, bounds, sched_t, sched_w, pol_state, *,
-               policy_name: str, wants_ticks: bool, redistribute: bool,
-               max_steps: int, impl: str, interpret: bool, stacked: bool):
+_STATIC_ARGS = ("policy_name", "wants_ticks", "redistribute",
+                "max_steps", "impl", "interpret", "stacked")
+
+
+def _vmapped_rows(ctx: _Ctx, bounds, sched_t, sched_w, pol_state, *,
+                  policy_name: str, wants_ticks: bool, redistribute: bool,
+                  max_steps: int, impl: str, interpret: bool,
+                  stacked: bool):
+    """The stepper vmapped over the (local) row axis — the shared body
+    of the single-device and per-shard paths."""
     row = functools.partial(
         _row_loop, policy_name=policy_name, wants_ticks=wants_ticks,
         redistribute=redistribute, max_steps=max_steps, impl=impl,
@@ -287,6 +318,89 @@ def _run_batch(ctx: _Ctx, bounds, sched_t, sched_w, pol_state, *,
         ctx, bounds, sched_t, sched_w, pol_state)
 
 
+# No donate_argnums on the steppers: the output pytree (row scalars +
+# job stamps) is far smaller than any input and can never alias one, so
+# XLA would reject every donation with a warning per dispatch.
+@functools.partial(jax.jit, static_argnames=_STATIC_ARGS)
+def _run_batch(ctx: _Ctx, bounds, sched_t, sched_w, pol_state, *,
+               policy_name: str, wants_ticks: bool, redistribute: bool,
+               max_steps: int, impl: str, interpret: bool, stacked: bool):
+    return _vmapped_rows(
+        ctx, bounds, sched_t, sched_w, pol_state,
+        policy_name=policy_name, wants_ticks=wants_ticks,
+        redistribute=redistribute, max_steps=max_steps, impl=impl,
+        interpret=interpret, stacked=stacked)
+
+
+@functools.lru_cache(maxsize=None)
+def _row_mesh(n_shards: int) -> Mesh:
+    """The 1-D device mesh the row axis shards over."""
+    return Mesh(np.array(jax.devices()[:n_shards]), ("rows",))
+
+
+def _ctx_specs(stacked: bool) -> _Ctx:
+    """shard_map partition specs for the geometry pytree: every leaf is
+    row-partitioned in the stacked layout (it carries a leading row
+    axis) and replicated in the shared layout; ``dt`` is always the
+    shared scalar."""
+    rows, rep = P("rows"), P()
+    leaf = rows if stacked else rep
+    return _Ctx(tab=StepTables(*([leaf] * len(StepTables._fields))),
+                node_seq=leaf, deps_pad=leaf, work_pad=leaf,
+                rho_pad=leaf, completed0=leaf, n_active=leaf, dt=rep)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=_STATIC_ARGS + ("n_shards",))
+def _run_batch_sharded(ctx: _Ctx, bounds, sched_t, sched_w, pol_state, *,
+                       policy_name: str, wants_ticks: bool,
+                       redistribute: bool, max_steps: int, impl: str,
+                       interpret: bool, stacked: bool, n_shards: int):
+    """The stepper with the row axis sharded over ``n_shards`` devices.
+
+    Each shard runs its own vmapped ``while_loop`` to completion with
+    no cross-device synchronization inside the loop (``check_rep`` off:
+    the outputs are row-partitioned by construction).  Callers pad the
+    row axis to a multiple of ``n_shards`` first.
+    """
+    body = functools.partial(
+        _vmapped_rows, policy_name=policy_name, wants_ticks=wants_ticks,
+        redistribute=redistribute, max_steps=max_steps, impl=impl,
+        interpret=interpret, stacked=stacked)
+    rows = P("rows")
+    return shard_map(body, mesh=_row_mesh(n_shards),
+                     in_specs=(_ctx_specs(stacked), rows, rows, rows,
+                               rows),
+                     out_specs=rows, check_rep=False)(
+        ctx, bounds, sched_t, sched_w, pol_state)
+
+
+def shard_count(requested: Optional[int], n_rows: int) -> int:
+    """Resolve a shard-device request against the visible devices and
+    the batch size: ``None`` means every visible device, and a batch
+    never shards wider than its row count (a 3-row batch on 8 devices
+    runs 3-wide, not 8-wide with 5 idle phantom shards)."""
+    avail = len(jax.devices())
+    n = avail if requested is None else min(int(requested), avail)
+    return max(1, min(n, n_rows))
+
+
+def stepper_cache_size() -> int:
+    """Total compiled-stepper cache entries (both dispatch paths).
+    The profiling layer samples this around each dispatch to attribute
+    compile time and count recompilations per sweep."""
+    return _run_batch._cache_size() + _run_batch_sharded._cache_size()
+
+
+def _pad_rows(pad: int, *arrays):
+    """Grow each array's leading (row) axis by ``pad`` replicas of its
+    last row — the sharded path's phantom rows, trimmed on fetch."""
+    if pad <= 0:
+        return arrays
+    return tuple(np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                 for a in arrays)
+
+
 def _to_device(x):
     """Normalize dtypes host-side; the jit boundary does the transfer."""
     a = np.asarray(x)
@@ -295,6 +409,14 @@ def _to_device(x):
     if a.dtype.kind == "i":
         return a.astype(np.int32, copy=False)
     return a
+
+
+class _Pending(NamedTuple):
+    """An in-flight dispatched batch: device-resident outputs plus the
+    accumulating profile (see :meth:`JaxBatchSimulator.dispatch`)."""
+
+    out: Dict[str, jnp.ndarray]
+    profile: BucketProfile
 
 
 class JaxBatchSimulator:
@@ -308,10 +430,14 @@ class JaxBatchSimulator:
     makes the rows' cluster bounds time-varying, resolved at exact
     arrival times inside the compiled loop.  ``use_kernel`` routes the
     per-wave hot path through the fused Pallas kernel;
-    ``kernel_interpret`` defaults to interpret-mode everywhere except a
-    real TPU backend.  Power traces are not retained (``trace_every``
-    must be ``None``): sweeps that need traces belong on the numpy
-    backends.
+    ``kernel_interpret`` defaults backend-detected (interpret on CPU,
+    native on GPU/TPU — see
+    :func:`repro.kernels.power_step.default_interpret`).
+    ``shard_devices`` shards the batch row axis across that many
+    visible devices (``None`` = all of them; with one device the
+    single-device vmap path runs unchanged).  Power traces are not
+    retained (``trace_every`` must be ``None``): sweeps that need
+    traces belong on the numpy backends.
     """
 
     def __init__(self, graph: JobDependencyGraph, specs: Sequence[NodeSpec],
@@ -322,6 +448,7 @@ class JaxBatchSimulator:
                  max_steps: int = 1_000_000, use_kernel: bool = False,
                  kernel_interpret: Optional[bool] = None,
                  bound_schedules: Optional[Sequence] = None,
+                 shard_devices: Optional[int] = None,
                  **policy_kwargs):
         graph.topological_order()          # validates the DAG
         if len(specs) != len(graph.nodes):
@@ -330,7 +457,8 @@ class JaxBatchSimulator:
         self.specs = list(specs)
         self._setup_run_params(bounds, policy, dt, latency_s, trace_every,
                                max_steps, use_kernel, kernel_interpret,
-                               policy_kwargs, bound_schedules)
+                               policy_kwargs, bound_schedules,
+                               shard_devices)
         b = self.n_rows
         arrays = build_graph_arrays(graph, self.specs)
         self._init_rows(
@@ -351,6 +479,7 @@ class JaxBatchSimulator:
                kernel_interpret: Optional[bool] = None,
                bound_schedules: Optional[Sequence] = None,
                pad_dims: Optional[Tuple[int, int, int, int, int]] = None,
+               shard_devices: Optional[int] = None,
                **policy_kwargs) -> "JaxBatchSimulator":
         """Build a mixed-shape compiled batch: row ``b`` runs
         ``items[b]`` under ``bounds[b]`` (see
@@ -362,7 +491,8 @@ class JaxBatchSimulator:
         self.specs = None
         self._setup_run_params(bounds, policy, dt, latency_s, trace_every,
                                max_steps, use_kernel, kernel_interpret,
-                               policy_kwargs, bound_schedules)
+                               policy_kwargs, bound_schedules,
+                               shard_devices)
         arrays = stack_graph_arrays(items, pad_dims)
         self._init_rows(
             arrays, stacked=True,
@@ -389,7 +519,8 @@ class JaxBatchSimulator:
 
     def _setup_run_params(self, bounds, policy, dt, latency_s, trace_every,
                           max_steps, use_kernel, kernel_interpret,
-                          policy_kwargs, bound_schedules) -> None:
+                          policy_kwargs, bound_schedules,
+                          shard_devices=None) -> None:
         if dt <= 0:
             raise ValueError("dt must be positive")
         if trace_every is not None:
@@ -404,8 +535,9 @@ class JaxBatchSimulator:
         self.max_steps = int(max_steps)
         self.use_kernel = use_kernel
         if kernel_interpret is None:
-            kernel_interpret = jax.default_backend() != "tpu"
+            kernel_interpret = default_interpret()
         self.kernel_interpret = bool(kernel_interpret)
+        self.n_shards = shard_count(shard_devices, len(self.bounds))
         self._sched = pad_bound_schedules(bound_schedules, len(self.bounds))
         if isinstance(policy, JaxPolicy):
             if policy_kwargs:
@@ -447,7 +579,19 @@ class JaxBatchSimulator:
                     completed0=completed0, n_active=n_active,
                     dt=np.asarray(self.dt, ftype))
 
-    def run(self) -> List[SimResult]:
+    def dispatch(self) -> _Pending:
+        """Pack, pad, and *asynchronously* launch the compiled batch.
+
+        Returns as soon as the stepper is enqueued on the device(s):
+        the caller overlaps host work (packing the next bucket) with
+        the device compute and collects results later with
+        :meth:`fetch`.  The profile records the host packing time, the
+        dispatch wall-clock, and — when this dispatch grew the jit
+        cache — the compile time it paid (a cache hit dispatches in
+        microseconds, so the dispatch wall *is* the compile on a miss).
+        """
+        prof = BucketProfile(rows=self.n_rows, devices=self.n_shards)
+        t0 = time.perf_counter()
         self.policy.prepare(self)
         pol_state = {k: _to_device(v)
                      for k, v in self.policy.init_state(self).items()}
@@ -456,9 +600,23 @@ class JaxBatchSimulator:
         else:
             sched_t = np.full((self.n_rows, 1), BIG_TIME)
             sched_w = np.zeros((self.n_rows, 1))
-        out = _run_batch(
-            self._ctx(), _to_device(self.bounds), _to_device(sched_t),
-            _to_device(sched_w), pol_state,
+        ctx = self._ctx()
+        bounds = self.bounds
+        pad = (-self.n_rows) % self.n_shards
+        if pad:
+            bounds, sched_t, sched_w = _pad_rows(pad, bounds, sched_t,
+                                                 sched_w)
+            pol_state = self.policy.pad_state_rows(pol_state, pad)
+            if self.stacked:
+                ctx = ctx._replace(
+                    tab=StepTables(*_pad_rows(pad, *ctx.tab)),
+                    node_seq=_pad_rows(pad, ctx.node_seq)[0],
+                    deps_pad=_pad_rows(pad, ctx.deps_pad)[0],
+                    work_pad=_pad_rows(pad, ctx.work_pad)[0],
+                    rho_pad=_pad_rows(pad, ctx.rho_pad)[0],
+                    completed0=_pad_rows(pad, ctx.completed0)[0],
+                    n_active=_pad_rows(pad, ctx.n_active)[0])
+        statics = dict(
             policy_name=self.policy.name,
             wants_ticks=self.policy.wants_ticks,
             redistribute=self.policy.redistribute,
@@ -466,9 +624,45 @@ class JaxBatchSimulator:
             impl="pallas" if self.use_kernel else "ref",
             interpret=self.kernel_interpret,
             stacked=self.stacked)
-        out = {k: np.asarray(v) for k, v in out.items()}
+        prof.cache_key = ((ctx.work_pad.shape, ctx.node_seq.shape,
+                           self.n_shards, self.policy.name)
+                          + tuple(sorted(statics.items())))
+        args = (ctx, _to_device(bounds), _to_device(sched_t),
+                _to_device(sched_w), pol_state)
+        cache0 = stepper_cache_size()
+        t1 = time.perf_counter()
+        prof.pack_s = t1 - t0
+        if self.n_shards > 1:
+            out = _run_batch_sharded(*args, n_shards=self.n_shards,
+                                     **statics)
+        else:
+            out = _run_batch(*args, **statics)
+        prof.dispatch_s = time.perf_counter() - t1
+        prof.compiled = stepper_cache_size() > cache0
+        prof.compile_s = prof.dispatch_s if prof.compiled else 0.0
+        return _Pending(out=out, profile=prof)
+
+    def fetch(self, pending: _Pending) -> List[SimResult]:
+        """Block on a dispatched batch and build its results.
+
+        The whole output pytree comes back in ONE fused device-to-host
+        transfer (``jax.device_get``) — never one sync per field — and
+        shard-padding phantom rows are trimmed before any bookkeeping.
+        """
+        prof = pending.profile
+        t0 = time.perf_counter()
+        jax.block_until_ready(pending.out)
+        t1 = time.perf_counter()
+        prof.run_s = t1 - t0
+        out = _device_get(pending.out)
+        prof.transfer_s = time.perf_counter() - t1
+        out = {k: np.asarray(v)[:self.n_rows] for k, v in out.items()}
         self._check_failures(out)
         return self._results(out)
+
+    def run(self) -> List[SimResult]:
+        """Dispatch and immediately fetch (the synchronous facade)."""
+        return self.fetch(self.dispatch())
 
     def _check_failures(self, out: Dict[str, np.ndarray]) -> None:
         if out["stalled"].any():

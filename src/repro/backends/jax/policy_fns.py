@@ -70,8 +70,26 @@ class JaxPolicy:
         owning :class:`~repro.backends.jax.engine.JaxBatchSimulator`."""
 
     def init_state(self, sim) -> Dict[str, np.ndarray]:
-        """Per-row policy-state pytree, batched over rows (leading B)."""
+        """Per-row policy-state pytree, batched over rows (leading B).
+
+        Every leaf MUST carry the batch row axis first: the sharded
+        executor partitions axis 0 across devices and pads it to a
+        shard multiple (:meth:`pad_state_rows`), so a leaf without the
+        row axis would be silently mis-sharded."""
         return {}
+
+    @staticmethod
+    def pad_state_rows(state: Dict[str, np.ndarray],
+                       pad: int) -> Dict[str, np.ndarray]:
+        """Grow the state's row axis by ``pad`` phantom rows (the
+        sharded engine rounds the batch up to a multiple of the device
+        count).  The default replicates the last row — correct for any
+        state whose rows are independent, which the per-row stepper
+        guarantees; the phantom rows' results are discarded."""
+        if pad <= 0 or not state:
+            return state
+        return {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                for k, v in state.items()}
 
     @staticmethod
     def caps_fn(ctx, st, pol) -> jnp.ndarray:

@@ -1,0 +1,104 @@
+"""Compile/run/transfer profiling for the sharded sweep executor.
+
+Every bucket a jax sweep dispatches gets one :class:`BucketProfile`
+with the four phases of its life separated out:
+
+* **pack** — host-side array packing: ``stack_graph_arrays`` / LUT
+  stacking / bound-schedule padding plus the engine's geometry build
+  (overlaps the *previous* bucket's device compute under the sweep
+  engine's async pipeline);
+* **compile** — stepper tracing + XLA compilation, attributed from the
+  dispatch wall-clock when the call grew the jit cache (a cache hit
+  dispatches in microseconds, a miss is dominated by compilation);
+* **run** — time spent blocking until the device results are ready
+  (under the pipeline this is the wait *remaining* at fetch time, i.e.
+  device time not hidden behind host work);
+* **transfer** — the single fused device-to-host fetch of the whole
+  output pytree.
+
+:class:`SweepProfile` aggregates the buckets of one sweep and renders
+the one-line summary that ``SweepResult.backend_summary()`` appends.
+This module deliberately imports no jax: the sweep engine constructs
+profiles even when planning work for jax-free fallbacks, and BENCH
+tooling loads :meth:`SweepProfile.to_dict` payloads anywhere.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class BucketProfile:
+    """One dispatched bucket's accounting (times in seconds)."""
+
+    bucket: str = "?"                #: sweep bucket label
+    rows: int = 0                    #: batch rows (before shard padding)
+    devices: int = 1                 #: shard count the batch ran on
+    #: jit-cache identity: (padded envelope dims, shard count, policy).
+    cache_key: Optional[Tuple] = None
+    compiled: bool = False           #: did this dispatch grow the cache?
+    pack_s: float = 0.0
+    dispatch_s: float = 0.0
+    compile_s: float = 0.0
+    run_s: float = 0.0
+    transfer_s: float = 0.0
+
+    def to_dict(self) -> Dict[str, object]:
+        """Flat JSON-ready payload (BENCH records embed these)."""
+        return {
+            "bucket": self.bucket, "rows": self.rows,
+            "devices": self.devices, "compiled": self.compiled,
+            "cache_key": (None if self.cache_key is None
+                          else [str(k) for k in self.cache_key]),
+            "pack_s": self.pack_s, "dispatch_s": self.dispatch_s,
+            "compile_s": self.compile_s, "run_s": self.run_s,
+            "transfer_s": self.transfer_s,
+        }
+
+
+@dataclass
+class SweepProfile:
+    """All bucket profiles of one batched sweep."""
+
+    buckets: List[BucketProfile] = field(default_factory=list)
+
+    def add(self, bucket: BucketProfile) -> None:
+        """Append one bucket's profile."""
+        self.buckets.append(bucket)
+
+    @property
+    def compiles(self) -> int:
+        """Dispatches that triggered a fresh stepper compilation."""
+        return sum(1 for b in self.buckets if b.compiled)
+
+    @property
+    def cache_hits(self) -> int:
+        """Dispatches served entirely from the jit cache."""
+        return sum(1 for b in self.buckets if not b.compiled)
+
+    def total(self, phase: str) -> float:
+        """Sum one phase (``pack``/``dispatch``/``compile``/``run``/
+        ``transfer``) over every bucket, in seconds."""
+        return sum(getattr(b, f"{phase}_s") for b in self.buckets)
+
+    def summary(self) -> str:
+        """The ``backend_summary()`` suffix: jit-cache behaviour plus
+        the compile/run/transfer wall-clock split."""
+        return (f"jit: {self.compiles} compiled, {self.cache_hits} cached"
+                f" | t: pack={self.total('pack'):.3f}s"
+                f" compile={self.total('compile'):.3f}s"
+                f" run={self.total('run'):.3f}s"
+                f" transfer={self.total('transfer'):.3f}s")
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-ready payload for ``BENCH_*.json`` records."""
+        return {
+            "compiles": self.compiles, "cache_hits": self.cache_hits,
+            "pack_s": self.total("pack"),
+            "compile_s": self.total("compile"),
+            "run_s": self.total("run"),
+            "transfer_s": self.total("transfer"),
+            "buckets": [b.to_dict() for b in self.buckets],
+        }

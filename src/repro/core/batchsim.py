@@ -291,6 +291,49 @@ def pad_bound_schedules(
     return sched_t, sched_w
 
 
+#: Loop-state multiplier for :func:`estimate_row_bytes`: the compiled
+#: stepper's carry is double-buffered by XLA and the outputs pytree
+#: lives alongside the inputs, so the live working set is a small
+#: multiple of one row's state footprint.
+_STATE_FACTOR = 3.0
+
+
+def estimate_row_bytes(pad_dims: Tuple[int, int, int, int, int],
+                       itemsize: int = 4) -> int:
+    """Bytes one batch row occupies on device under a padding envelope.
+
+    ``pad_dims`` is the bucket envelope ``(N, J, K, D, S)`` (see
+    :func:`stack_graph_arrays`); ``itemsize`` is the element width the
+    backend runs at (4 for the jax engine's float32/int32 default, 8
+    for the numpy backend's float64).  The model sums the per-row
+    geometry (:class:`BatchArrays` leaves plus the ``(S, N)``/``(1, N)``
+    LUT step tables) and the wave-loop carry
+    (lane state, job bookkeeping, start/end stamps) scaled by a
+    double-buffering factor.  It is intentionally a slight
+    over-estimate: the sweep engine's memory-aware planner uses it to
+    split oversized buckets *before* dispatch, where guessing low means
+    an allocator failure mid-sweep and guessing high merely costs an
+    extra (pipelined) bucket.
+    """
+    n, j, k, d, s = (int(x) for x in pad_dims)
+    jp = j + 1
+    geometry = (
+        2 * jp            # work_pad, rho_pad
+        + n * k           # node_seq
+        + jp * d          # deps_pad
+        + jp              # completed0
+        + 2 * s * n       # state_p / state_f step tables
+        + 7 * n           # lane vectors (idle/f_min/f_nom/span/...)
+        + 4               # bounds + padded schedule entries (amortized)
+    )
+    carry = (
+        4 * n             # ptr / running / remaining / caps
+        + 3 * jp          # completed / start_t / end_t
+        + 16              # row scalars (t, bound, energy, peak, ...)
+    )
+    return int(itemsize * (geometry + _STATE_FACTOR * carry))
+
+
 class BatchSimulator:
     """One batch: B scenario rows advanced in lock-step waves.
 

@@ -44,17 +44,42 @@ Example — a two-graph grid batched onto the vector backend::
 from __future__ import annotations
 
 import concurrent.futures as _futures
+import os
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple, Union)
 
-from .batchsim import BatchSimulator
+from .batchsim import BatchSimulator, estimate_row_bytes
 from .graph import JobDependencyGraph
 from .ilp import PowerAssignment
 from .power import NodeSpec
 from .simulator import SimResult, Simulator
+
+#: Default device-memory budget for one dispatched bucket, in MiB
+#: (override per engine with ``memory_budget_mb`` or globally with the
+#: ``REPRO_DEVICE_BUDGET_MB`` environment variable).  Sized for small
+#: accelerators; a bucket whose padded rows exceed it is split into
+#: device-aligned sub-buckets instead of growing without bound.
+DEFAULT_MEMORY_BUDGET_MB = 1024.0
+
+
+def plan_chunk_rows(row_bytes: int, budget_bytes: int,
+                    align: int = 1) -> int:
+    """Rows one dispatch may carry under a device-memory budget.
+
+    ``row_bytes`` is the per-row footprint of the bucket's padding
+    envelope (:func:`repro.core.batchsim.estimate_row_bytes`);
+    ``align`` is the shard width (visible device count) — the cap is
+    rounded *down* to a multiple of it so every device receives whole
+    rows without shard-padding waste, but never below one full shard
+    width (a bucket must be dispatchable even when a single
+    shard-row's worth of state already exceeds the budget).
+    """
+    align = max(1, int(align))
+    cap = int(budget_bytes) // max(1, int(row_bytes))
+    return max(align, (cap // align) * align)
 
 
 @dataclass(frozen=True)
@@ -119,10 +144,17 @@ class MapRecord:
 
 
 class SweepResult:
-    """Structured table over the finished sweep."""
+    """Structured table over the finished sweep.
 
-    def __init__(self, records: List[SweepRecord]):
+    ``profile`` is the compiled backend's
+    :class:`~repro.backends.jax.profile.SweepProfile` (per-bucket
+    compile / run / transfer timings) when the sweep dispatched jax
+    buckets, else ``None``.
+    """
+
+    def __init__(self, records: List[SweepRecord], profile=None):
         self.records = records
+        self.profile = profile
 
     def __len__(self) -> int:
         return len(self.records)
@@ -167,6 +199,8 @@ class SweepResult:
             detail = ", ".join(f"{k} x{n}"
                                for k, n in sorted(reasons.items()))
             parts += f" | fallbacks: {detail}"
+        if self.profile is not None and self.profile.buckets:
+            parts += f" | {self.profile.summary()}"
         return f"backends: {parts}"
 
     def event_fallbacks(self) -> List[SweepRecord]:
@@ -289,6 +323,18 @@ class SweepEngine:
     :attr:`SweepRecord.fallback_reason` and the batch they ran in on
     :attr:`SweepRecord.bucket`; ``vector_dt`` is the batch backends'
     control tick.
+
+    The ``"jax"`` executor additionally runs **device-resident and
+    sharded**: each bucket's row axis is partitioned across the visible
+    devices (``shard_devices`` caps how many; ``None`` uses all, and a
+    single-device host transparently degenerates to plain ``vmap``),
+    buckets whose padded footprint exceeds ``memory_budget_mb`` are
+    split into device-aligned sub-buckets
+    (:func:`plan_chunk_rows` over
+    :func:`~repro.core.batchsim.estimate_row_bytes`), and with
+    ``pipeline=True`` (default) bucket *k+1* is packed and dispatched
+    on the host while bucket *k* still computes on device — results
+    are fetched afterwards, one transfer per bucket.
     """
 
     _ILP_POLICIES = ("ilp", "ilp-makespan")
@@ -298,13 +344,22 @@ class SweepEngine:
     BATCHED_EXECUTORS = ("vector", "jax")
 
     def __init__(self, max_workers: Optional[int] = None,
-                 executor: str = "thread", vector_dt: float = 0.05):
+                 executor: str = "thread", vector_dt: float = 0.05,
+                 shard_devices: Optional[int] = None,
+                 memory_budget_mb: Optional[float] = None,
+                 pipeline: bool = True):
         if executor not in ("thread", "process", "serial", "vector",
                             "jax"):
             raise ValueError(f"unknown executor {executor!r}")
         self.max_workers = max_workers
         self.executor = executor
         self.vector_dt = vector_dt
+        self.shard_devices = shard_devices
+        if memory_budget_mb is None:
+            memory_budget_mb = float(os.environ.get(
+                "REPRO_DEVICE_BUDGET_MB", DEFAULT_MEMORY_BUDGET_MB))
+        self.memory_budget_mb = float(memory_budget_mb)
+        self.pipeline = pipeline
         # key -> (graph, assignment); see _assignment_for for why the
         # graph reference is retained
         self._assign_cache: Dict[
@@ -505,21 +560,23 @@ class SweepEngine:
         schedules = [s.bound_schedule for s in scens]
         if not any(schedules):
             schedules = None
+        common = dict(dt=self.vector_dt,
+                      latency_s=first.latency_s,
+                      trace_every=first.trace_every,
+                      bound_schedules=schedules)
         if backend == "jax":
             from repro.backends.jax import (JaxBatchSimulator,
                                             get_jax_policy)
 
             cls, policy = JaxBatchSimulator, get_jax_policy(first.policy,
                                                             **kwargs)
+            common["shard_devices"] = self.shard_devices
         else:
             from repro.policies.vector import get_vector_policy
 
             cls, policy = BatchSimulator, get_vector_policy(first.policy,
                                                             **kwargs)
-        common = dict(policy=policy, dt=self.vector_dt,
-                      latency_s=first.latency_s,
-                      trace_every=first.trace_every,
-                      bound_schedules=schedules)
+        common["policy"] = policy
         bounds = [s.bound_w for s in scens]
         if shared:
             # single-graph batch: exact shapes, zero padding overhead
@@ -542,12 +599,50 @@ class SweepEngine:
             else:
                 leftovers.append(k)
 
+        profile = None
+        jax_align = 1
+        if any(key[0] == "jax" for key in groups):
+            from repro.backends.jax.engine import shard_count
+            from repro.backends.jax.profile import SweepProfile
+
+            profile = SweepProfile()
+            # The shard width every jax chunk should be a multiple of:
+            # the device count the engine would pick for an unbounded
+            # batch (per-chunk it still clamps to the chunk's rows).
+            jax_align = shard_count(self.shard_devices, 1 << 30)
+        budget_bytes = int(self.memory_budget_mb * 2 ** 20)
+
         def solve(k: int):
             try:
                 return k, self._assignment_for(scenarios[k]), None
             except Exception as e:  # noqa: BLE001
                 return k, None, f"{type(e).__name__}: {e}"
 
+        def finish(batch_idx, results, t0, backend, bucket):
+            per_cell = (time.perf_counter() - t0) / len(batch_idx)
+            for k, result in zip(batch_idx, results):
+                records[k] = SweepRecord(scenarios[k], result,
+                                         elapsed_s=per_cell,
+                                         backend=backend,
+                                         fallback_reason=plans[k][1],
+                                         bucket=bucket)
+
+        def fail(batch_idx, err, t0, backend, bucket):
+            per_cell = (time.perf_counter() - t0) / len(batch_idx)
+            for k in batch_idx:
+                records[k] = SweepRecord(scenarios[k], None, error=err,
+                                         elapsed_s=per_cell,
+                                         backend=backend,
+                                         fallback_reason=plans[k][1],
+                                         bucket=bucket)
+
+        # Phase A — plan, pack and *dispatch*.  jax chunks go to the
+        # device asynchronously and are parked on ``in_flight``; while
+        # chunk k computes, the loop is already packing chunk k+1 (the
+        # pipeline overlap).  ``pipeline=False`` fetches each chunk
+        # before packing the next (the sequential baseline benchmarks
+        # compare against); vector chunks always run synchronously.
+        in_flight: List[tuple] = []
         for bnum, (key, idxs) in enumerate(groups.items()):
             backend, (n_pad, j_pad) = key[0], key[-1]
             # minor dims: power-of-two of the bucket's own maxima
@@ -555,7 +650,6 @@ class SweepEngine:
                      for k in idxs]
             pad_dims = (n_pad, j_pad) + tuple(
                 self._next_pow2(max(col)) for col in zip(*minor))
-            t0 = time.perf_counter()
             first = scenarios[idxs[0]]
             # Shared setup first: a failing ILP solve is a per-scenario
             # failure, not a batch abort.  Solves run on a thread pool —
@@ -567,45 +661,69 @@ class SweepEngine:
                     solved = list(pool.map(solve, idxs))
             else:
                 solved = [solve(k) for k in idxs]
-            batch_idx: List[int] = []
-            assignments: List[Optional[PowerAssignment]] = []
+            live: List[int] = []
+            assign_by_k: Dict[int, Optional[PowerAssignment]] = {}
             for k, assignment, err in solved:
                 if err is not None:
                     records[k] = SweepRecord(scenarios[k], None, error=err,
                                              backend=backend,
                                              fallback_reason=plans[k][1])
                 else:
-                    assignments.append(assignment)
-                    batch_idx.append(k)
-            if not batch_idx:
+                    assign_by_k[k] = assignment
+                    live.append(k)
+            if not live:
                 continue
-            scens = [scenarios[k] for k in batch_idx]
-            shared = (len({id(s.graph) for s in scens}) == 1
-                      and len({self._specs_sig(s.specs)
-                               for s in scens}) == 1)
-            bucket = (f"{backend}#{bnum}:shared" if shared else
-                      f"{backend}#{bnum}:padded(N{pad_dims[0]},"
-                      f"J{pad_dims[1]})")
+            # Memory-aware envelope: rows per dispatch capped by the
+            # device budget, aligned to the shard width; an oversized
+            # bucket becomes several device-aligned sub-buckets.
+            itemsize = 4 if backend == "jax" else 8
+            cap = plan_chunk_rows(
+                estimate_row_bytes(pad_dims, itemsize), budget_bytes,
+                jax_align if backend == "jax" else 1)
+            chunks = [live[i:i + cap] for i in range(0, len(live), cap)]
+            for ci, batch_idx in enumerate(chunks):
+                t0 = time.perf_counter()
+                scens = [scenarios[k] for k in batch_idx]
+                assignments = [assign_by_k[k] for k in batch_idx]
+                shared = (len({id(s.graph) for s in scens}) == 1
+                          and len({self._specs_sig(s.specs)
+                                   for s in scens}) == 1)
+                tag = f"{backend}#{bnum}" + \
+                    (f".{ci}" if len(chunks) > 1 else "")
+                bucket = (f"{tag}:shared" if shared else
+                          f"{tag}:padded(N{pad_dims[0]},"
+                          f"J{pad_dims[1]})")
+                try:
+                    sim = self._make_batch_sim(backend, scens,
+                                               assignments, shared,
+                                               pad_dims)
+                    if backend == "jax":
+                        pending = sim.dispatch()
+                        pending.profile.bucket = bucket
+                        if self.pipeline:
+                            in_flight.append(
+                                (sim, pending, batch_idx, bucket, t0))
+                            continue
+                        results = sim.fetch(pending)
+                        profile.add(pending.profile)
+                    else:
+                        results = sim.run()
+                    finish(batch_idx, results, t0, backend, bucket)
+                except Exception as e:  # noqa: BLE001
+                    fail(batch_idx, f"{type(e).__name__}: {e}", t0,
+                         backend, bucket)
+
+        # Phase B — fetch in dispatch order: block until each chunk's
+        # device work finishes, then pull its whole output pytree in
+        # one transfer.
+        for sim, pending, batch_idx, bucket, t0 in in_flight:
             try:
-                sim = self._make_batch_sim(backend, scens, assignments,
-                                           shared, pad_dims)
-                results = sim.run()
-                per_cell = (time.perf_counter() - t0) / len(batch_idx)
-                for k, result in zip(batch_idx, results):
-                    records[k] = SweepRecord(scenarios[k], result,
-                                             elapsed_s=per_cell,
-                                             backend=backend,
-                                             fallback_reason=plans[k][1],
-                                             bucket=bucket)
+                results = sim.fetch(pending)
+                finish(batch_idx, results, t0, "jax", bucket)
             except Exception as e:  # noqa: BLE001
-                err = f"{type(e).__name__}: {e}"
-                per_cell = (time.perf_counter() - t0) / len(batch_idx)
-                for k in batch_idx:
-                    records[k] = SweepRecord(scenarios[k], None, error=err,
-                                             elapsed_s=per_cell,
-                                             backend=backend,
-                                             fallback_reason=plans[k][1],
-                                             bucket=bucket)
+                fail(batch_idx, f"{type(e).__name__}: {e}", t0, "jax",
+                     bucket)
+            profile.add(pending.profile)
 
         if leftovers:
             left = [scenarios[k] for k in leftovers]
@@ -618,7 +736,7 @@ class SweepEngine:
             for k, rec in zip(leftovers, done):
                 rec.fallback_reason = plans[k][1]
                 records[k] = rec
-        return SweepResult(records)
+        return SweepResult(records, profile=profile)
 
     # --------------------------------------------------------------- map
     def map(self, fn: Callable[[object], object], items: Iterable[object],

@@ -48,6 +48,15 @@ from repro.core.power import DUTY_FLOOR
 #: Finite stand-in for "no completion event" (kernel-safe vs inf).
 BIG_TIME = 1e30
 
+
+def default_interpret() -> bool:
+    """Backend-detected interpret default: the Pallas interpreter on CPU
+    (no Mosaic compiler there), the native compiled kernel on any real
+    accelerator backend (mirrors ``repro.kernels.ops._on_tpu``).  Call
+    sites pass ``interpret=None`` to get this, so GPU/TPU runs compile
+    natively without per-site hardcoding."""
+    return jax.default_backend() == "cpu"
+
 #: Cap-fitting tolerance for the translator.  The numpy reference uses
 #: ``1e-12`` under float64; the compiled engine runs float32, where ILP
 #: caps that equal a state power exactly can round one ulp below it —
@@ -207,13 +216,16 @@ def _power_step_kernel(caps_ref, running_ref, remaining_ref, rho_ref,
 
 def power_step_pallas(tab: StepTables, caps, running, remaining, rho,
                       bound, redistribute: bool = False,
-                      interpret: bool = True):
+                      interpret: bool = None):
     """Pallas form of :func:`power_step_ref` — one fused kernel per row.
 
-    ``interpret=True`` (the default) runs the kernel through the Pallas
-    interpreter, so the path is exercised on CPU CI; pass
-    ``interpret=False`` on a real TPU backend.
+    ``interpret=None`` (the default) resolves via
+    :func:`default_interpret`: the Pallas interpreter on CPU (so the
+    path is exercised on CPU CI), the natively compiled kernel on
+    GPU/TPU.  Pass an explicit bool to force either mode.
     """
+    if interpret is None:
+        interpret = default_interpret()
     n = caps.shape[-1]
     dtype = caps.dtype
     lane = jax.ShapeDtypeStruct((1, n), dtype)
@@ -229,10 +241,11 @@ def power_step_pallas(tab: StepTables, caps, running, remaining, rho,
 
 def power_step(tab: StepTables, caps, running, remaining, rho, bound,
                redistribute: bool = False, impl: str = "ref",
-               interpret: bool = True):
+               interpret: bool = None):
     """Dispatch one fused wave step: ``impl`` is ``"ref"`` (pure jnp,
-    the engine default) or ``"pallas"`` (fused kernel; interpret-mode
-    fallback keeps it runnable on CPU)."""
+    the engine default) or ``"pallas"`` (fused kernel;
+    ``interpret=None`` auto-resolves to the interpreter on CPU and the
+    native compiled kernel off-CPU, see :func:`default_interpret`)."""
     if impl == "ref":
         return power_step_ref(tab, caps, running, remaining, rho, bound,
                               redistribute)

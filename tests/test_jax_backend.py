@@ -145,6 +145,80 @@ class TestEngine:
                               time_limit=5.0)
 
 
+class TestDispatchPipeline:
+    def test_single_transfer_per_run(self, monkeypatch):
+        """The whole output pytree comes back in ONE device-to-host
+        fetch — eager per-field unpacking would sync once per array."""
+        from repro.backends.jax import engine
+
+        calls = []
+        real = engine._device_get
+
+        def counting(tree):
+            calls.append(tree)
+            return real(tree)
+
+        monkeypatch.setattr(engine, "_device_get", counting)
+        results = JaxBatchSimulator(listing2_graph(),
+                                    homogeneous_cluster(3),
+                                    [2.5, 6.0, 12.0]).run()
+        assert len(results) == 3
+        assert len(calls) == 1
+        # ...and it really was the whole pytree, not a single leaf
+        assert isinstance(calls[0], dict) and len(calls[0]) > 3
+
+    def test_dispatch_fetch_round_trip(self):
+        """run() == fetch(dispatch()) with a populated profile."""
+        sim = JaxBatchSimulator(listing2_graph(), homogeneous_cluster(3),
+                                [6.0, 9.0])
+        pending = sim.dispatch()
+        assert pending.profile.rows == 2
+        assert pending.profile.cache_key is not None
+        results = sim.fetch(pending)
+        ref = simulate(listing2_graph(), homogeneous_cluster(3), 6.0,
+                       "equal-share")
+        assert results[0].makespan == pytest.approx(ref.makespan,
+                                                    rel=1e-5)
+        assert pending.profile.transfer_s >= 0.0
+
+    def test_rerun_is_compile_free(self):
+        """Re-running the same mixed family through the sweep engine
+        must hit the jit cache on every bucket: the cache key (padding
+        envelope + shard spec + policy name) is stable across runs."""
+        from repro.core import (SweepEngine, listing2_uniform,
+                                scenario_grid)
+
+        grid = scenario_grid(
+            {"l2": listing2_graph(), "u": listing2_uniform(10.0)},
+            homogeneous_cluster(3), [6.0, 9.0],
+            ["equal-share", "oracle"])
+        engine = SweepEngine(executor="jax")
+        first = engine.run(grid)
+        assert not first.failures and first.profile is not None
+        again = SweepEngine(executor="jax").run(grid)
+        assert not again.failures
+        assert again.profile.compiles == 0
+        assert again.profile.cache_hits == len(again.profile.buckets)
+        assert "jit:" in again.backend_summary()
+
+
+class TestInterpretDefault:
+    def test_cpu_defaults_to_interpreter(self):
+        """power_step resolves interpret=None from the backend: the
+        Pallas interpreter on CPU, native lowering elsewhere."""
+        from repro.kernels.power_step import default_interpret
+
+        expected = jax.default_backend() == "cpu"
+        assert default_interpret() is expected
+
+    def test_engine_inherits_backend_default(self):
+        sim = JaxBatchSimulator(listing2_graph(), homogeneous_cluster(3),
+                                [6.0], use_kernel=True)
+        from repro.kernels.power_step import default_interpret
+
+        assert sim.kernel_interpret == default_interpret()
+
+
 class TestKernelEngineParity:
     def test_use_kernel_matches_ref_engine(self):
         """The Pallas-kernel engine (interpret mode) and the jnp
