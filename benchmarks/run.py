@@ -50,7 +50,8 @@ def main(argv=None) -> int:
 
     from . import (depth_tables, family_sweep, fig8_power_sweep,
                    fig9_stddev_sweep, lm_workloads, npb_analogues,
-                   roofline_report, sharded_sweep, trace_replay)
+                   roofline_report, serve_stream, sharded_sweep,
+                   trace_replay)
 
     benches = {
         "depth_tables": depth_tables.main,        # Tables I & II
@@ -60,6 +61,7 @@ def main(argv=None) -> int:
         "family": family_sweep.main,              # mixed scenario families
         "sharded": sharded_sweep.main,            # multi-device scaling
         "trace-replay": trace_replay.main,        # corpus ingest + sweep
+        "serve": serve_stream.main,               # streaming service
         "lm_workloads": lm_workloads.main,        # pipeline/MoE graphs
         "roofline": roofline_report.main,         # §Roofline table
     }

@@ -1,0 +1,163 @@
+"""Streaming-service benchmark: online arrival stream vs offline sweep.
+
+The question this bench answers: what does the streaming frontend
+(:class:`repro.serving.SweepService`) cost, and buy, relative to
+handing the *same* trace-corpus scenarios to the offline
+:class:`~repro.core.SweepEngine` in one closed batch?  The offline
+sweep is the throughput ceiling (perfect batching, no deadlines); the
+service trades some of it for per-request latency under an open-loop
+Poisson arrival stream.
+
+Reported per backend (``--backend vector``/``jax``):
+
+* offline wall-clock and cells/s on the corpus family (the baseline);
+* replay throughput and latency p50/p99 at each offered arrival rate;
+* the compile-once evidence: total compiles, steady-state
+  ``recompiles`` and ``compiles_after(warm-up)`` — both must be zero
+  (hard failure otherwise), and the stream must produce **zero** event
+  fallbacks, same bar as the trace-replay bench;
+* result-cache effect: a second identical replay answered from the
+  content cache.
+
+Results land in ``BENCH_serve.json`` via
+:data:`benchmarks.common.BENCH_RECORDS` (the CI serving job uploads
+it).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import SweepEngine
+from repro.serving import SweepService, poisson_replay
+
+from .common import BENCH_RECORDS, csv_line
+from .trace_replay import EXACT_POLICIES, build_corpus
+
+#: Offered arrival rates (requests/s).  The low rate leaves buckets
+#: mostly deadline-flushed (latency-bound regime); the high rate fills
+#: buckets before their deadline (throughput-bound regime).
+QUICK_RATES = (50.0, 400.0)
+FULL_RATES = (25.0, 100.0, 400.0, 1600.0)
+
+FLUSH_DEADLINE_S = 0.05
+
+
+def main(quick: bool = False, backend: str = "vector") -> List[str]:
+    if backend == "jax":
+        from repro.backends.jax import HAS_JAX
+
+        if not HAS_JAX:
+            print("  jax requested but not installed; serving the "
+                  "vector backend instead")
+            backend = "vector"
+    if backend not in ("vector", "jax"):
+        backend = "vector"
+
+    corpus = build_corpus(quick)
+    fracs = (0.15, 0.4, 0.8) if quick else \
+        tuple(0.1 + 0.08 * i for i in range(10))
+    family = corpus.family(bound_fracs=fracs, policies=EXACT_POLICIES)
+    scenarios = family.scenarios()
+    cells = len(scenarios)
+    print(f"corpus: {len(corpus)} traces -> {cells} cells, "
+          f"backend {backend}")
+
+    # --- offline baseline: the same cells as one closed sweep --------
+    engine = SweepEngine(executor=backend)
+    if backend == "jax":
+        engine.run(scenarios)                # compile warm-up
+    t0 = time.perf_counter()
+    offline = engine.run(scenarios)
+    t_offline = time.perf_counter() - t0
+    if offline.failures:
+        raise RuntimeError(f"offline failures: "
+                           f"{[(r.scenario.name, r.error) for r in offline.failures]}")
+    print(f"  offline {backend}: {t_offline:.3f}s "
+          f"({cells / t_offline:.0f} cells/s)")
+
+    bench = {"backend": backend, "cells": cells,
+             "flush_deadline_s": FLUSH_DEADLINE_S,
+             "offline": {"wall_s": t_offline,
+                         "throughput_rps": cells / t_offline},
+             "streams": {}}
+    out = [csv_line(f"serve_offline_{backend}",
+                    t_offline * 1e6 / cells,
+                    f"cells={cells};rps={cells / t_offline:.0f}")]
+
+    by_name = {r.scenario.name + repr(r.scenario.bound_w)
+               + repr(r.scenario.policy): r.result.makespan
+               for r in offline.records}
+
+    for rate in (QUICK_RATES if quick else FULL_RATES):
+        with SweepService(executor=backend,
+                          flush_deadline_s=FLUSH_DEADLINE_S,
+                          result_cache=False) as svc:
+            # warm pass primes the jit cache so the measured replay is
+            # steady state; warm-up compiles are expected and excluded
+            for t in svc.submit_many(scenarios):
+                t.result(timeout=600)
+            svc.drain(timeout=60)
+            warm_buckets = len(svc.profile.buckets)
+            report = poisson_replay(svc, scenarios, rate_hz=rate,
+                                    seed=int(rate), timeout_s=600)
+            prof = svc.profile
+        if report.failures:
+            raise RuntimeError(
+                f"stream failures @{rate}/s: "
+                f"{[(r.scenario.name, r.error) for r in report.failures]}")
+        if report.fallbacks:
+            raise RuntimeError(
+                f"{len(report.fallbacks)} event fallbacks @{rate}/s — "
+                f"a trace corpus must batch completely")
+        after = prof.compiles_after(warm_buckets)
+        if prof.recompiles or after:
+            raise RuntimeError(
+                f"steady state not compile-free @{rate}/s: "
+                f"{prof.recompiles} recompiles, {after} past warm-up")
+        # stream results must agree with the offline sweep
+        maxdiff = max(
+            abs(r.result.makespan
+                - by_name[r.scenario.name + repr(r.scenario.bound_w)
+                          + repr(r.scenario.policy)])
+            for r in report.records)
+        summary = report.to_dict()
+        summary["compiles"] = prof.compiles
+        summary["compiles_after_warmup"] = after
+        summary["max_makespan_diff_vs_offline"] = maxdiff
+        bench["streams"][f"{rate:g}"] = summary
+        print(f"  stream @{rate:g}/s: {summary['throughput_rps']:.0f} "
+              f"req/s  p50={summary['latency_p50_s'] * 1e3:.1f}ms "
+              f"p99={summary['latency_p99_s'] * 1e3:.1f}ms  "
+              f"jit after warm-up: {after}  maxdiff {maxdiff:.2e}")
+        out.append(csv_line(
+            f"serve_stream_{backend}_{rate:g}",
+            1e6 / summary["throughput_rps"],
+            f"p50_ms={summary['latency_p50_s'] * 1e3:.2f};"
+            f"p99_ms={summary['latency_p99_s'] * 1e3:.2f};"
+            f"recompiles={after}"))
+
+    # --- result cache: identical replay answered without dispatch ----
+    with SweepService(executor=backend,
+                      flush_deadline_s=FLUSH_DEADLINE_S) as svc:
+        for t in svc.submit_many(scenarios):
+            t.result(timeout=600)
+        rep2 = poisson_replay(svc, scenarios, rate_hz=max(
+            QUICK_RATES if quick else FULL_RATES), seed=99,
+            timeout_s=600)
+        hits = sum(1 for r in rep2.records if r.cached)
+    print(f"  result cache: {hits}/{cells} repeat requests answered "
+          f"from cache (p50 {rep2.latency_pct(50) * 1e6:.0f}us)")
+    bench["cache_replay"] = {"hits": hits, "requests": cells,
+                             "latency_p50_s": rep2.latency_pct(50)}
+    out.append(csv_line(f"serve_cache_{backend}",
+                        rep2.latency_pct(50) * 1e6,
+                        f"hits={hits}/{cells}"))
+
+    BENCH_RECORDS["serve_stream"] = bench
+    return out
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -1,39 +1,72 @@
-"""Batched serving example: prefill + decode with KV cache on a small
-MoE model (the serving-side face of the framework).
+"""Streaming sweep service walkthrough (docs/serving.md).
+
+Scenarios arrive one at a time; the service packs them into open
+padded buckets continuously (LLM-style continuous batching), flushes
+on full-or-deadline, keeps every envelope on one compiled stepper
+(zero steady-state recompiles), and answers repeats from a
+content-keyed result cache.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
+(uses the jax executor when installed, the numpy vector backend
+otherwise)
 """
 
 import sys
-import time
 
 sys.path.insert(0, "src")
 
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.configs import get_smoke  # noqa: E402
-from repro.models import init_params  # noqa: E402
-from repro.serving.engine import ServeEngine  # noqa: E402
+from repro.backends.jax import HAS_JAX  # noqa: E402
+from repro.core import (homogeneous_cluster, listing2_graph,  # noqa: E402
+                        listing2_uniform, scenario_grid)
+from repro.serving import SweepService, poisson_replay  # noqa: E402
 
 
 def main():
-    cfg = get_smoke("moonshot-v1-16b-a3b")  # small MoE
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_seq=64, max_batch=8)
+    executor = "jax" if HAS_JAX else "vector"
+    cells = scenario_grid(
+        {"l2": listing2_graph(), "u10": listing2_uniform(10.0)},
+        homogeneous_cluster(3), [2.5, 6.0, 9.0, 12.0],
+        ["equal-share", "oracle"])
 
-    rng = np.random.default_rng(0)
-    requests = [rng.integers(2, cfg.vocab, (8, 12), dtype=np.int32),
-                rng.integers(2, cfg.vocab, (8, 12), dtype=np.int32)]
+    with SweepService(executor=executor, flush_deadline_s=0.05,
+                      bucket_rows=8) as svc:
+        # -- warm-up: first sight of each envelope compiles its stepper
+        for t in svc.submit_many(cells):
+            rec = t.result(timeout=300)
+            assert rec.ok, rec.error
+        svc.drain(timeout=60)
+        warm = len(svc.profile.buckets)
+        print(f"warm-up: {warm} buckets, "
+              f"{svc.profile.compiles} compiles")
 
-    for i, prompts in enumerate(requests):
-        t0 = time.perf_counter()
-        out = engine.generate(prompts, max_new=16,
-                              temperature=0.8, seed=i)
-        dt = time.perf_counter() - t0
-        print(f"request batch {i}: {prompts.shape[0]} lanes x "
-              f"{out.steps} new tokens in {dt:.2f}s")
-        print(f"  lane 0 continuation: {out.new_tokens[0].tolist()}")
+        # -- steady state: a Poisson arrival stream of fresh bounds
+        # (same envelopes -> same compiled steppers, zero recompiles)
+        fresh = scenario_grid(
+            {"l2": listing2_graph(), "u10": listing2_uniform(10.0)},
+            homogeneous_cluster(3), [3.5, 5.0, 8.0, 11.0],
+            ["equal-share", "oracle"])
+        report = poisson_replay(svc, fresh, rate_hz=100.0, seed=0,
+                                timeout_s=300)
+        print(f"stream: {len(report.records)} requests at 100/s -> "
+              f"{report.throughput:.0f} req/s, "
+              f"p50 {report.latency_pct(50) * 1e3:.1f}ms, "
+              f"p99 {report.latency_pct(99) * 1e3:.1f}ms")
+        print(f"steady-state compiles: "
+              f"{svc.profile.compiles_after(warm)} (must be 0)")
+
+        # -- repeats are answered from the content-keyed result cache
+        again = [t.result(timeout=60)
+                 for t in svc.submit_many(fresh[:4])]
+        print(f"repeat requests: "
+              f"{sum(1 for r in again if r.cached)}/4 cache hits "
+              f"(p50 {sorted(r.latency_s for r in again)[1] * 1e6:.0f}us)")
+
+        stats = svc.stats()
+        print(f"stats: {stats.buckets} buckets "
+              f"({stats.flushed_full} full / "
+              f"{stats.flushed_deadline} deadline), "
+              f"{stats.phantom_rows} phantom rows, "
+              f"{stats.fallbacks} fallbacks")
 
 
 if __name__ == "__main__":

@@ -39,8 +39,11 @@ The jitted steppers are module-level functions keyed only on array
 shapes and static policy/shard config, so same-shape batches — every
 bucket of a sweep grid — share one compilation; the sweep engine's
 power-of-two padding envelopes make repeated mixed-family sweeps hit
-the same cache (:func:`stepper_cache_size` exposes the cache growth the
-profiling layer reports).
+the same cache.  The profiling layer attributes compilation **per
+cache key** (:meth:`JaxBatchSimulator.dispatch` claims each distinct
+jit signature exactly once), so concurrent dispatches — the streaming
+service's normal mode — charge a compile to the bucket that actually
+paid it; :func:`stepper_cache_size` still exposes the raw cache size.
 
 **Sharding**: with more than one visible device the batch row axis is
 partitioned across a 1-D ``("rows",)`` mesh with
@@ -65,6 +68,7 @@ from __future__ import annotations
 
 import functools
 import math
+import threading
 import time
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
@@ -386,10 +390,29 @@ def shard_count(requested: Optional[int], n_rows: int) -> int:
 
 
 def stepper_cache_size() -> int:
-    """Total compiled-stepper cache entries (both dispatch paths).
-    The profiling layer samples this around each dispatch to attribute
-    compile time and count recompilations per sweep."""
+    """Total compiled-stepper cache entries (both dispatch paths)."""
     return _run_batch._cache_size() + _run_batch_sharded._cache_size()
+
+
+#: Stepper cache keys this process has already dispatched (and hence
+#: compiled).  Compilation is attributed **per key**, never from a
+#: global cache-size delta around one dispatch: when several batches
+#: are dispatched concurrently — the streaming service's normal mode —
+#: another dispatch's compile would land inside this bucket's sampling
+#: window and be charged to the wrong profile.
+_compiled_keys: set = set()
+_compiled_keys_lock = threading.Lock()
+
+
+def _claim_cache_key(key: tuple) -> bool:
+    """True when ``key`` was not seen before (this dispatch compiles);
+    marks it seen atomically so concurrent dispatches of one new key
+    attribute its compilation exactly once."""
+    with _compiled_keys_lock:
+        if key in _compiled_keys:
+            return False
+        _compiled_keys.add(key)
+        return True
 
 
 def _pad_rows(pad: int, *arrays):
@@ -586,9 +609,12 @@ class JaxBatchSimulator:
         the caller overlaps host work (packing the next bucket) with
         the device compute and collects results later with
         :meth:`fetch`.  The profile records the host packing time, the
-        dispatch wall-clock, and — when this dispatch grew the jit
-        cache — the compile time it paid (a cache hit dispatches in
-        microseconds, so the dispatch wall *is* the compile on a miss).
+        dispatch wall-clock, and — when this dispatch is the first for
+        its jit cache key — the compile time it paid (a cache hit
+        dispatches in microseconds, so the dispatch wall *is* the
+        compile on a miss).  Attribution is per cache key, so
+        concurrent dispatches never charge a compile to the wrong
+        bucket.
         """
         prof = BucketProfile(rows=self.n_rows, devices=self.n_shards)
         t0 = time.perf_counter()
@@ -624,21 +650,29 @@ class JaxBatchSimulator:
             impl="pallas" if self.use_kernel else "ref",
             interpret=self.kernel_interpret,
             stacked=self.stacked)
-        prof.cache_key = ((ctx.work_pad.shape, ctx.node_seq.shape,
-                           self.n_shards, self.policy.name)
-                          + tuple(sorted(statics.items())))
+        # The full jit identity of this dispatch: every traced operand
+        # shape (geometry envelope, padded row count, schedule columns,
+        # policy-state leaves) plus the static config.  Two dispatches
+        # share a compiled stepper iff their keys are equal, so the
+        # per-key compile attribution below is exact even when batches
+        # dispatch concurrently.
+        prof.cache_key = (
+            (ctx.work_pad.shape, ctx.node_seq.shape,
+             np.shape(bounds), np.shape(sched_t),
+             tuple(sorted((k, np.shape(v)) for k, v in pol_state.items())),
+             self.n_shards, self.policy.name)
+            + tuple(sorted(statics.items())))
         args = (ctx, _to_device(bounds), _to_device(sched_t),
                 _to_device(sched_w), pol_state)
-        cache0 = stepper_cache_size()
         t1 = time.perf_counter()
         prof.pack_s = t1 - t0
+        prof.compiled = _claim_cache_key(prof.cache_key)
         if self.n_shards > 1:
             out = _run_batch_sharded(*args, n_shards=self.n_shards,
                                      **statics)
         else:
             out = _run_batch(*args, **statics)
         prof.dispatch_s = time.perf_counter() - t1
-        prof.compiled = stepper_cache_size() > cache0
         prof.compile_s = prof.dispatch_s if prof.compiled else 0.0
         return _Pending(out=out, profile=prof)
 

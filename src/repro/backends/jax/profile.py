@@ -8,8 +8,11 @@ with the four phases of its life separated out:
   (overlaps the *previous* bucket's device compute under the sweep
   engine's async pipeline);
 * **compile** — stepper tracing + XLA compilation, attributed from the
-  dispatch wall-clock when the call grew the jit cache (a cache hit
-  dispatches in microseconds, a miss is dominated by compilation);
+  dispatch wall-clock when the call is the *first for its jit cache
+  key* (a cache hit dispatches in microseconds, a miss is dominated by
+  compilation).  Attribution is per cache key — a set of keys already
+  dispatched, not a global cache-size delta — so it stays correct when
+  several buckets dispatch concurrently (the streaming service);
 * **run** — time spent blocking until the device results are ready
   (under the pipeline this is the wait *remaining* at fetch time, i.e.
   device time not hidden behind host work);
@@ -77,6 +80,27 @@ class SweepProfile:
     def cache_hits(self) -> int:
         """Dispatches served entirely from the jit cache."""
         return sum(1 for b in self.buckets if not b.compiled)
+
+    @property
+    def recompiles(self) -> int:
+        """Steady-state recompilations: dispatches that compiled for a
+        cache key this profile had *already* dispatched earlier.  A
+        healthy long-lived service warms each envelope once and then
+        reuses it forever — its smoke test asserts this is zero."""
+        seen: set = set()
+        n = 0
+        for b in self.buckets:
+            if b.compiled and b.cache_key in seen:
+                n += 1
+            seen.add(b.cache_key)
+        return n
+
+    def compiles_after(self, warmup_buckets: int) -> int:
+        """Dispatches beyond the first ``warmup_buckets`` that still
+        compiled — the service benchmarks' "zero recompiles after
+        warm-up" acceptance gate."""
+        return sum(1 for b in self.buckets[warmup_buckets:]
+                   if b.compiled)
 
     def total(self, phase: str) -> float:
         """Sum one phase (``pack``/``dispatch``/``compile``/``run``/

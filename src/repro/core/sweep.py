@@ -44,6 +44,7 @@ Example — a two-graph grid batched onto the vector backend::
 from __future__ import annotations
 
 import concurrent.futures as _futures
+import multiprocessing
 import os
 import threading
 import time
@@ -63,6 +64,22 @@ from .simulator import SimResult, Simulator
 #: accelerators; a bucket whose padded rows exceed it is split into
 #: device-aligned sub-buckets instead of growing without bound.
 DEFAULT_MEMORY_BUDGET_MB = 1024.0
+
+
+def _process_pool(max_workers: Optional[int]
+                  ) -> _futures.ProcessPoolExecutor:
+    """A process pool that is safe to start after JAX has initialized.
+
+    The Linux default start method is ``fork``, and forking a process
+    whose JAX runtime has already spun up its thread pools is a
+    documented deadlock risk (jax emits a ``RuntimeWarning`` per
+    worker).  Every process executor in this module therefore uses the
+    ``spawn`` start method: workers are fresh interpreters that import
+    :mod:`repro` cleanly, at the cost of a slightly slower pool start.
+    """
+    return _futures.ProcessPoolExecutor(
+        max_workers=max_workers,
+        mp_context=multiprocessing.get_context("spawn"))
 
 
 def plan_chunk_rows(row_bytes: int, budget_bytes: int,
@@ -299,6 +316,236 @@ def _run_scenario(scenario: Scenario,
                      bound_schedule=scenario.bound_schedule).run()
 
 
+# --------------------------------------------------------- bucket planning
+# The planning vocabulary below is module-level on purpose: the offline
+# SweepEngine and the streaming service (repro.serving) share one
+# definition of "which scenarios batch together", "what envelope they
+# pad to" and "how a batch simulator is built", so a scenario lands in
+# the same compiled stepper whichever frontend dispatched it.
+
+#: Policies whose shared setup is an ILP solve (cached per unique
+#: (graph, cluster, bound, solver) by :class:`AssignmentCache`).
+ILP_POLICIES = ("ilp", "ilp-makespan")
+
+
+def specs_signature(specs: Sequence[NodeSpec]) -> tuple:
+    """Content signature of a cluster: LUT names can collide across
+    differently parameterized builders (e.g. ``tpu_v5e_lut(4)`` vs
+    ``tpu_v5e_lut(8)``), so hash the actual states too."""
+    return tuple(
+        (sp.lut.name, sp.speed, sp.lut.idle_w,
+         tuple((st.freq_mhz, st.power_w) for st in sp.lut.states))
+        for sp in specs)
+
+
+def next_pow2(x: int) -> int:
+    """The power-of-two padding target for one shape dimension."""
+    return 1 << (max(1, int(x)) - 1).bit_length()
+
+
+def scenario_dims(s: Scenario,
+                  cache: Optional[Dict[tuple, tuple]] = None
+                  ) -> Tuple[int, int, int, int, int]:
+    """A scenario's batching shape ``(N, J, K, D, S)``: nodes, jobs,
+    per-lane sequence length (jobs-per-node max + 1), dependency
+    fan-in, LUT states.  ``cache`` (keyed on the graph/specs
+    identities) skips the O(J + N) graph walk for the many scenarios
+    of a sweep that share one graph."""
+    key = (id(s.graph), id(s.specs))
+    if cache is not None and key in cache:
+        return cache[key]
+    g = s.graph
+    n = len(g.nodes)
+    j = len(g.jobs)
+    k = max(len(g.node_jobs(nid)) for nid in g.nodes) + 1
+    d = max((len(job.deps) for job in g.jobs.values()), default=0) or 1
+    lut_states = max(len(sp.lut.states) for sp in s.specs)
+    dims = (n, j, k, d, lut_states)
+    if cache is not None:
+        cache[key] = dims
+    return dims
+
+
+def bucket_key(backend: str, s: Scenario,
+               dims_cache: Optional[Dict[tuple, tuple]] = None) -> tuple:
+    """Scenarios sharing a key run as ONE batch: same backend, policy,
+    latency and trace config, and the same power-of-two (N, J) padding
+    envelope.  Rounding nodes/jobs up to powers of two keeps the bucket
+    count logarithmic in shape diversity; the minor dimensions
+    (per-lane sequence, dependency fan-in, LUT states) are padded to
+    the bucket's own power-of-two maxima at build time, so they never
+    split buckets but compiled jax steppers are still reused across
+    similarly-sized sweeps."""
+    n, j = scenario_dims(s, dims_cache)[:2]
+    return (backend, s.policy, round(s.latency_s, 12), s.trace_every,
+            (next_pow2(n), next_pow2(j)))
+
+
+def scenario_cache_key(s: Scenario) -> Optional[tuple]:
+    """Content-based identity of one scenario's *result*, or ``None``
+    when the scenario is uncacheable (stateful policy instances).
+
+    Unlike :func:`bucket_key` — which answers "what compiles together"
+    and deliberately ignores graph content — this key answers "is this
+    the same simulation": the canonical graph text, the cluster
+    content signature, the exact bound/schedule, and the full policy
+    configuration.  The streaming service's result cache is keyed on
+    it, so a re-submitted scenario is answered without a dispatch.
+    """
+    if not isinstance(s.policy, str):
+        return None
+    return ("scenario", s.graph.to_text(), specs_signature(s.specs),
+            round(s.bound_w, 12), s.policy,
+            tuple(sorted((k, repr(v))
+                         for k, v in s.policy_kwargs.items())),
+            round(s.latency_s, 12), s.trace_every,
+            tuple((round(float(t), 12), round(float(w), 12))
+                  for t, w in s.bound_schedule),
+            s.use_makespan_milp, s.ilp_time_limit)
+
+
+def vector_ineligibility(s: Scenario) -> Optional[str]:
+    """Why a scenario cannot run on the numpy batch backend (None when
+    it can).  Bound schedules are *not* a fallback class: both batched
+    backends resolve scheduled cluster-bound arrivals at exact event
+    times."""
+    from repro.policies.vector import has_vector_policy
+
+    if not isinstance(s.policy, str):
+        return "policy-instance"
+    if not has_vector_policy(s.policy):
+        return f"no-vector-policy({s.policy})"
+    if s.policy_kwargs:
+        return "policy-kwargs"
+    return None
+
+
+def jax_ineligibility(s: Scenario) -> Optional[str]:
+    """Why a scenario cannot run on the compiled jax backend."""
+    reason = vector_ineligibility(s)
+    if reason is not None:
+        return reason
+    from repro.backends.jax import HAS_JAX
+
+    if not HAS_JAX:
+        return "jax-not-installed"
+    from repro.backends.jax import has_jax_policy
+
+    if not has_jax_policy(s.policy):
+        return f"no-jax-policy({s.policy})"
+    if s.trace_every is not None:
+        return "trace-retention"
+    return None
+
+
+def plan_backend(s: Scenario,
+                 requested: str) -> Tuple[str, Optional[str]]:
+    """(actual backend, fallback reason) for one scenario under the
+    requested batched executor.  ``"jax"`` falls back through the
+    vector backend before landing on the event simulator."""
+    if requested == "jax":
+        reason = jax_ineligibility(s)
+        if reason is None:
+            return "jax", None
+        if vector_ineligibility(s) is None:
+            return "vector", reason
+        return "event", reason
+    reason = vector_ineligibility(s)
+    return ("vector", None) if reason is None else ("event", reason)
+
+
+class AssignmentCache:
+    """Thread-safe ILP shared setup: assignments are solved once per
+    unique (graph, cluster, bound, solver) and reused by every
+    scenario — and every frontend — that asks for them."""
+
+    def __init__(self):
+        # key -> (graph, assignment); the entry pins the graph: the key
+        # contains id(graph), so the graph must stay alive for as long
+        # as the entry does or a recycled id could alias a different
+        # workload.
+        self._cache: Dict[
+            tuple, Tuple[JobDependencyGraph, PowerAssignment]] = {}
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def key(s: Scenario) -> tuple:
+        """The solve identity: graph, cluster content, bound, solver."""
+        return (id(s.graph), specs_signature(s.specs),
+                round(s.bound_w, 9), s.use_makespan_milp,
+                s.ilp_time_limit)
+
+    def assignment_for(self, s: Scenario) -> Optional[PowerAssignment]:
+        """The scenario's pre-solved assignment (``None`` when the
+        policy does not take one).  Raises on an infeasible solve —
+        callers record that as a per-scenario failure."""
+        if not (isinstance(s.policy, str)
+                and s.policy in ILP_POLICIES
+                and "assignment" not in s.policy_kwargs):
+            return None
+        key = self.key(s)
+        with self._lock:
+            cached = self._cache.get(key)
+        if cached is not None:
+            return cached[1]
+        from .ilp import build_makespan_milp, solve_paper_ilp
+
+        solver = (build_makespan_milp
+                  if (s.use_makespan_milp or s.policy == "ilp-makespan")
+                  else solve_paper_ilp)
+        assignment = solver(s.graph, list(s.specs), s.bound_w,
+                            time_limit=s.ilp_time_limit)
+        with self._lock:
+            self._cache[key] = (s.graph, assignment)
+        return assignment
+
+
+def build_batch_sim(backend: str, scens: List[Scenario],
+                    assignments: List[Optional[PowerAssignment]],
+                    shared: bool, pad_dims: tuple, *,
+                    vector_dt: float = 0.05,
+                    shard_devices: Optional[int] = None):
+    """Construct the batch simulator for one planned bucket.
+
+    ``scens`` must share a :func:`bucket_key`; ``shared`` selects the
+    zero-padding single-graph layout, otherwise the scenarios stack
+    into the ``pad_dims`` envelope.  ``backend`` is ``"vector"`` or
+    ``"jax"`` — the returned simulator is a
+    :class:`~repro.core.batchsim.BatchSimulator` or
+    :class:`~repro.backends.jax.engine.JaxBatchSimulator` accordingly
+    (only the latter has the dispatch/fetch split).
+    """
+    first = scens[0]
+    kwargs = {}
+    if first.policy in ILP_POLICIES:
+        kwargs["assignments"] = assignments
+    schedules = [s.bound_schedule for s in scens]
+    if not any(schedules):
+        schedules = None
+    common = dict(dt=vector_dt,
+                  latency_s=first.latency_s,
+                  trace_every=first.trace_every,
+                  bound_schedules=schedules)
+    if backend == "jax":
+        from repro.backends.jax import JaxBatchSimulator, get_jax_policy
+
+        cls, policy = JaxBatchSimulator, get_jax_policy(first.policy,
+                                                        **kwargs)
+        common["shard_devices"] = shard_devices
+    else:
+        from repro.policies.vector import get_vector_policy
+
+        cls, policy = BatchSimulator, get_vector_policy(first.policy,
+                                                        **kwargs)
+    common["policy"] = policy
+    bounds = [s.bound_w for s in scens]
+    if shared:
+        # single-graph batch: exact shapes, zero padding overhead
+        return cls(first.graph, list(first.specs), bounds, **common)
+    return cls.padded([(s.graph, list(s.specs)) for s in scens],
+                      bounds, pad_dims=pad_dims, **common)
+
+
 class SweepEngine:
     """Runs a batch of scenarios with shared setup and a worker pool.
 
@@ -337,7 +584,7 @@ class SweepEngine:
     are fetched afterwards, one transfer per bucket.
     """
 
-    _ILP_POLICIES = ("ilp", "ilp-makespan")
+    _ILP_POLICIES = ILP_POLICIES
     #: Executors that group same-shape scenarios into batch-simulator runs
     #: (public: benchmarks and callers test membership to decide whether a
     #: backend summary/fallback accounting applies).
@@ -360,50 +607,13 @@ class SweepEngine:
                 "REPRO_DEVICE_BUDGET_MB", DEFAULT_MEMORY_BUDGET_MB))
         self.memory_budget_mb = float(memory_budget_mb)
         self.pipeline = pipeline
-        # key -> (graph, assignment); see _assignment_for for why the
-        # graph reference is retained
-        self._assign_cache: Dict[
-            tuple, Tuple[JobDependencyGraph, PowerAssignment]] = {}
-        self._assign_lock = threading.Lock()
+        self._assignments = AssignmentCache()
 
     # ------------------------------------------------------- shared setup
-    @staticmethod
-    def _specs_sig(specs: Sequence[NodeSpec]) -> tuple:
-        """Content signature of a cluster: LUT names can collide across
-        differently parameterized builders (e.g. ``tpu_v5e_lut(4)`` vs
-        ``tpu_v5e_lut(8)``), so hash the actual states too."""
-        return tuple(
-            (sp.lut.name, sp.speed, sp.lut.idle_w,
-             tuple((st.freq_mhz, st.power_w) for st in sp.lut.states))
-            for sp in specs)
-
-    def _assignment_key(self, s: Scenario) -> tuple:
-        return (id(s.graph), self._specs_sig(s.specs),
-                round(s.bound_w, 9), s.use_makespan_milp, s.ilp_time_limit)
+    _specs_sig = staticmethod(specs_signature)
 
     def _assignment_for(self, s: Scenario) -> Optional[PowerAssignment]:
-        if not (isinstance(s.policy, str)
-                and s.policy in self._ILP_POLICIES
-                and "assignment" not in s.policy_kwargs):
-            return None
-        key = self._assignment_key(s)
-        with self._assign_lock:
-            cached = self._assign_cache.get(key)
-        # The cache entry pins the graph: the key contains id(graph), so
-        # the graph must stay alive for as long as the entry does or a
-        # recycled id could alias a different workload.
-        if cached is not None:
-            return cached[1]
-        from .ilp import build_makespan_milp, solve_paper_ilp
-
-        solver = (build_makespan_milp
-                  if (s.use_makespan_milp or s.policy == "ilp-makespan")
-                  else solve_paper_ilp)
-        assignment = solver(s.graph, list(s.specs), s.bound_w,
-                            time_limit=s.ilp_time_limit)
-        with self._assign_lock:
-            self._assign_cache[key] = (s.graph, assignment)
-        return assignment
+        return self._assignments.assignment_for(s)
 
     # --------------------------------------------------------------- run
     def _run_one(self, s: Scenario) -> SweepRecord:
@@ -440,8 +650,7 @@ class SweepEngine:
                 except Exception as e:  # noqa: BLE001
                     records[k] = SweepRecord(
                         s, None, error=f"{type(e).__name__}: {e}")
-            with _futures.ProcessPoolExecutor(
-                    max_workers=self.max_workers) as pool:
+            with _process_pool(self.max_workers) as pool:
                 futs = {pool.submit(_run_scenario, s, a): k
                         for k, s, a in pre}
                 for fut in _futures.as_completed(futs):
@@ -458,131 +667,28 @@ class SweepEngine:
             return SweepResult(list(pool.map(one, scenarios)))
 
     # ----------------------------------------------------- batched backends
-    @staticmethod
-    def _vector_ineligibility(s: Scenario) -> Optional[str]:
-        """Why a scenario cannot run on the numpy batch backend (None
-        when it can).  Bound schedules are *not* a fallback class: both
-        batched backends resolve scheduled cluster-bound arrivals at
-        exact event times."""
-        from repro.policies.vector import has_vector_policy
-
-        if not isinstance(s.policy, str):
-            return "policy-instance"
-        if not has_vector_policy(s.policy):
-            return f"no-vector-policy({s.policy})"
-        if s.policy_kwargs:
-            return "policy-kwargs"
-        return None
-
-    @staticmethod
-    def _jax_ineligibility(s: Scenario) -> Optional[str]:
-        """Why a scenario cannot run on the compiled jax backend."""
-        reason = SweepEngine._vector_ineligibility(s)
-        if reason is not None:
-            return reason
-        from repro.backends.jax import HAS_JAX
-
-        if not HAS_JAX:
-            return "jax-not-installed"
-        from repro.backends.jax import has_jax_policy
-
-        if not has_jax_policy(s.policy):
-            return f"no-jax-policy({s.policy})"
-        if s.trace_every is not None:
-            return "trace-retention"
-        return None
+    _vector_ineligibility = staticmethod(vector_ineligibility)
+    _jax_ineligibility = staticmethod(jax_ineligibility)
 
     def _plan_backend(self, s: Scenario,
                       requested: str) -> Tuple[str, Optional[str]]:
-        """(actual backend, fallback reason) for one scenario under the
-        requested batched executor.  ``"jax"`` falls back through the
-        vector backend before landing on the event simulator."""
-        if requested == "jax":
-            reason = self._jax_ineligibility(s)
-            if reason is None:
-                return "jax", None
-            if self._vector_ineligibility(s) is None:
-                return "vector", reason
-            return "event", reason
-        reason = self._vector_ineligibility(s)
-        return ("vector", None) if reason is None else ("event", reason)
+        return plan_backend(s, requested)
 
     # ------------------------------------------------------ bucket planning
-    @staticmethod
-    def _next_pow2(x: int) -> int:
-        return 1 << (max(1, int(x)) - 1).bit_length()
-
-    @staticmethod
-    def _scenario_dims(s: Scenario,
-                       cache: Optional[Dict[tuple, tuple]] = None
-                       ) -> Tuple[int, int, int, int, int]:
-        """A scenario's batching shape ``(N, J, K, D, S)``: nodes, jobs,
-        per-lane sequence length (jobs-per-node max + 1), dependency
-        fan-in, LUT states.  ``cache`` (keyed on the graph/specs
-        identities) skips the O(J + N) graph walk for the many
-        scenarios of a sweep that share one graph."""
-        key = (id(s.graph), id(s.specs))
-        if cache is not None and key in cache:
-            return cache[key]
-        g = s.graph
-        n = len(g.nodes)
-        j = len(g.jobs)
-        k = max(len(g.node_jobs(nid)) for nid in g.nodes) + 1
-        d = max((len(job.deps) for job in g.jobs.values()), default=0) or 1
-        lut_states = max(len(sp.lut.states) for sp in s.specs)
-        dims = (n, j, k, d, lut_states)
-        if cache is not None:
-            cache[key] = dims
-        return dims
+    _next_pow2 = staticmethod(next_pow2)
+    _scenario_dims = staticmethod(scenario_dims)
 
     def _bucket_key(self, backend: str, s: Scenario,
                     dims_cache: Optional[Dict[tuple, tuple]] = None
                     ) -> tuple:
-        """Scenarios sharing a key run as ONE batch: same backend,
-        policy, latency and trace config, and the same power-of-two
-        (N, J) padding envelope.  Rounding nodes/jobs up to powers of
-        two keeps the bucket count logarithmic in shape diversity; the
-        minor dimensions (per-lane sequence, dependency fan-in, LUT
-        states) are padded to the bucket's own power-of-two maxima at
-        build time, so they never split buckets but compiled jax
-        steppers are still reused across similarly-sized sweeps."""
-        n, j = self._scenario_dims(s, dims_cache)[:2]
-        return (backend, s.policy, round(s.latency_s, 12), s.trace_every,
-                (self._next_pow2(n), self._next_pow2(j)))
+        return bucket_key(backend, s, dims_cache)
 
     def _make_batch_sim(self, backend: str, scens: List[Scenario],
                         assignments: List[Optional[PowerAssignment]],
                         shared: bool, pad_dims: tuple):
-        first = scens[0]
-        kwargs = {}
-        if first.policy in self._ILP_POLICIES:
-            kwargs["assignments"] = assignments
-        schedules = [s.bound_schedule for s in scens]
-        if not any(schedules):
-            schedules = None
-        common = dict(dt=self.vector_dt,
-                      latency_s=first.latency_s,
-                      trace_every=first.trace_every,
-                      bound_schedules=schedules)
-        if backend == "jax":
-            from repro.backends.jax import (JaxBatchSimulator,
-                                            get_jax_policy)
-
-            cls, policy = JaxBatchSimulator, get_jax_policy(first.policy,
-                                                            **kwargs)
-            common["shard_devices"] = self.shard_devices
-        else:
-            from repro.policies.vector import get_vector_policy
-
-            cls, policy = BatchSimulator, get_vector_policy(first.policy,
-                                                            **kwargs)
-        common["policy"] = policy
-        bounds = [s.bound_w for s in scens]
-        if shared:
-            # single-graph batch: exact shapes, zero padding overhead
-            return cls(first.graph, list(first.specs), bounds, **common)
-        return cls.padded([(s.graph, list(s.specs)) for s in scens],
-                          bounds, pad_dims=pad_dims, **common)
+        return build_batch_sim(backend, scens, assignments, shared,
+                               pad_dims, vector_dt=self.vector_dt,
+                               shard_devices=self.shard_devices)
 
     def _run_batched(self, scenarios: Sequence[Scenario],
                      requested: str) -> SweepResult:
@@ -700,12 +806,18 @@ class SweepEngine:
                     if backend == "jax":
                         pending = sim.dispatch()
                         pending.profile.bucket = bucket
+                        # Profile recording is unconditional from the
+                        # moment a bucket dispatches: a failed fetch
+                        # must still surface the bucket in
+                        # ``SweepResult.profile`` under BOTH pipeline
+                        # settings (the profile object is mutated in
+                        # place by the later fetch).
+                        profile.add(pending.profile)
                         if self.pipeline:
                             in_flight.append(
                                 (sim, pending, batch_idx, bucket, t0))
                             continue
                         results = sim.fetch(pending)
-                        profile.add(pending.profile)
                     else:
                         results = sim.run()
                     finish(batch_idx, results, t0, backend, bucket)
@@ -715,7 +827,7 @@ class SweepEngine:
 
         # Phase B — fetch in dispatch order: block until each chunk's
         # device work finishes, then pull its whole output pytree in
-        # one transfer.
+        # one transfer.  (Profiles were already recorded at dispatch.)
         for sim, pending, batch_idx, bucket, t0 in in_flight:
             try:
                 results = sim.fetch(pending)
@@ -723,7 +835,6 @@ class SweepEngine:
             except Exception as e:  # noqa: BLE001
                 fail(batch_idx, f"{type(e).__name__}: {e}", t0, "jax",
                      bucket)
-            profile.add(pending.profile)
 
         if leftovers:
             left = [scenarios[k] for k in leftovers]
@@ -762,8 +873,7 @@ class SweepEngine:
             # in submission order so the pool actually runs concurrently.
             t0 = time.perf_counter()
             recs = []
-            with _futures.ProcessPoolExecutor(
-                    max_workers=self.max_workers) as pool:
+            with _process_pool(self.max_workers) as pool:
                 futs = [(item, pool.submit(fn, item)) for item in items]
                 for item, fut in futs:
                     try:

@@ -1,35 +1,116 @@
-"""Serving CLI: batched prefill + decode with the KV-cache engine.
+"""Serving CLI: two frontends behind one entry point.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
-        --batch 4 --prompt-len 16 --max-new 24
+**Sweep-service mode** (``--trace-corpus``) replays a directory of
+recorded MPI traces into the streaming sweep service
+(:class:`repro.serving.SweepService`) as a Poisson arrival stream and
+reports throughput, latency percentiles, and the compile-once
+profile::
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --trace-corpus examples/traces --rate-hz 50 --executor jax
+
+``--expect-clean`` turns the steady-state contract into an exit code:
+non-zero when any request fell back to the event simulator or any
+dispatch beyond the first warm-up pass recompiled (the CI serving job
+gates on this).
+
+**LLM mode** (default, no ``--trace-corpus``) is the seed's batched
+prefill + decode smoke with the KV-cache engine::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b \
+        --smoke --batch 4 --prompt-len 16 --max-new 24
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
-import jax
-import numpy as np
 
-from ..configs import ARCH_IDS, ENCODER_ARCHS, get_config, get_smoke
-from ..models import init_params
-from ..serving.engine import ServeEngine
+def _serve_sweep(args: argparse.Namespace) -> int:
+    from ..core.scenarios import ScenarioFamily
+    from ..serving import SweepService, poisson_replay
+
+    family = ScenarioFamily.from_corpus(
+        args.trace_corpus,
+        bound_fracs=tuple(args.bound_fracs),
+        policies=tuple(args.policies),
+        strict=not args.no_strict)
+    scenarios = family.scenarios() * args.repeat
+    print(f"[serve] corpus {args.trace_corpus}: "
+          f"{len(family.members)} traces -> {len(scenarios)} requests "
+          f"({args.repeat}x family), offered rate {args.rate_hz}/s")
+
+    with SweepService(executor=args.executor,
+                      flush_deadline_s=args.flush_deadline,
+                      bucket_rows=args.bucket_rows,
+                      shard_devices=args.shard_devices,
+                      result_cache=not args.no_result_cache) as svc:
+        if args.warmup:
+            # Warm pass: one submission of every envelope, drained, so
+            # the replay below measures steady state.
+            t0 = time.perf_counter()
+            for t in svc.submit_many(family.scenarios()):
+                t.result(timeout=args.timeout)
+            svc.drain(timeout=args.timeout)
+            print(f"[serve] warm-up: {len(svc.profile.buckets)} buckets,"
+                  f" {svc.profile.compiles} compiles,"
+                  f" {time.perf_counter() - t0:.2f}s")
+        warm_buckets = len(svc.profile.buckets)
+        report = poisson_replay(svc, scenarios, rate_hz=args.rate_hz,
+                                seed=args.seed, timeout_s=args.timeout)
+        stats = svc.stats()
+        profile = svc.profile
+
+    summary = report.to_dict()
+    summary["stats"] = stats.to_dict()
+    summary["compiles"] = profile.compiles
+    summary["recompiles"] = profile.recompiles
+    summary["compiles_after_warmup"] = profile.compiles_after(
+        warm_buckets)
+    print(f"[serve] {summary['requests']} requests in "
+          f"{summary['wall_s']:.2f}s -> "
+          f"{summary['throughput_rps']:.1f} req/s | latency "
+          f"p50={summary['latency_p50_s'] * 1e3:.1f}ms "
+          f"p99={summary['latency_p99_s'] * 1e3:.1f}ms | "
+          f"{summary['fallbacks']} fallbacks, "
+          f"{summary['cache_hits']} cache hits | jit: "
+          f"{summary['compiles']} compiles, "
+          f"{summary['compiles_after_warmup']} after warm-up")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        print(f"[serve] wrote {args.json}")
+
+    if summary["failures"]:
+        for rec in report.failures[:5]:
+            print(f"[serve] FAILED {rec.scenario.name}: {rec.error}")
+        return 1
+    if args.expect_clean:
+        problems = []
+        if summary["fallbacks"]:
+            problems.append(f"{summary['fallbacks']} event fallbacks")
+        if summary["recompiles"]:
+            problems.append(f"{summary['recompiles']} recompiles")
+        if args.warmup and summary["compiles_after_warmup"]:
+            problems.append(f"{summary['compiles_after_warmup']} "
+                            "compiles after warm-up")
+        if problems:
+            print(f"[serve] NOT CLEAN: {', '.join(problems)}")
+            return 1
+        print("[serve] clean: no fallbacks, no steady-state compiles")
+    return 0
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", choices=[a for a in ARCH_IDS
-                                       if a not in ENCODER_ARCHS],
-                    default="qwen1.5-4b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args(argv)
+def _serve_llm(args: argparse.Namespace) -> int:
+    import jax
+    import numpy as np
+
+    from ..configs import get_config, get_smoke
+    from ..models import init_params
+    from ..serving.engine import ServeEngine
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -50,6 +131,59 @@ def main(argv=None) -> int:
     for b in range(min(args.batch, 2)):
         print(f"  lane {b}: ...{result.tokens[b, -8:].tolist()}")
     return 0
+
+
+def main(argv=None) -> int:
+    from ..configs import ARCH_IDS, ENCODER_ARCHS
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    sweep = ap.add_argument_group("sweep-service mode")
+    sweep.add_argument("--trace-corpus", default=None, metavar="DIR",
+                       help="directory of *.jsonl traces; presence "
+                            "selects sweep-service mode")
+    sweep.add_argument("--executor", choices=("jax", "vector"),
+                       default="jax")
+    sweep.add_argument("--rate-hz", type=float, default=50.0,
+                       help="Poisson arrival rate (requests/s)")
+    sweep.add_argument("--repeat", type=int, default=3,
+                       help="replay the corpus family this many times")
+    sweep.add_argument("--flush-deadline", type=float, default=0.05,
+                       help="max seconds a request waits in an open "
+                            "bucket (latency SLO knob)")
+    sweep.add_argument("--bucket-rows", type=int, default=8)
+    sweep.add_argument("--bound-fracs", type=float, nargs="+",
+                       default=(0.15, 0.4, 0.8))
+    sweep.add_argument("--policies", nargs="+",
+                       default=("equal-share", "oracle"))
+    sweep.add_argument("--shard-devices", type=int, default=None)
+    sweep.add_argument("--seed", type=int, default=0)
+    sweep.add_argument("--timeout", type=float, default=300.0)
+    sweep.add_argument("--no-warmup", dest="warmup",
+                       action="store_false", default=True)
+    sweep.add_argument("--no-result-cache", action="store_true")
+    sweep.add_argument("--no-strict", action="store_true",
+                       help="skip trace replay validation on load")
+    sweep.add_argument("--json", default=None, metavar="PATH",
+                       help="write the replay summary as JSON")
+    sweep.add_argument("--expect-clean", action="store_true",
+                       help="exit non-zero on event fallbacks or "
+                            "steady-state recompiles (CI gate)")
+
+    llm = ap.add_argument_group("LLM mode (default)")
+    llm.add_argument("--arch", choices=[a for a in ARCH_IDS
+                                        if a not in ENCODER_ARCHS],
+                     default="qwen1.5-4b")
+    llm.add_argument("--smoke", action="store_true", default=True)
+    llm.add_argument("--full", dest="smoke", action="store_false")
+    llm.add_argument("--batch", type=int, default=4)
+    llm.add_argument("--prompt-len", type=int, default=16)
+    llm.add_argument("--max-new", type=int, default=24)
+    llm.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    if args.trace_corpus is not None:
+        return _serve_sweep(args)
+    return _serve_llm(args)
 
 
 if __name__ == "__main__":

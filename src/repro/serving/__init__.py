@@ -1,0 +1,27 @@
+"""Long-lived serving frontends.
+
+Two residents share this package:
+
+* :class:`SweepService` (``service.py``) — the streaming scenario-sweep
+  server with continuous bucket batching, plus its arrival-stream
+  driver in ``stream.py``.  Pure-python orchestration over the core
+  planning vocabulary; safe to import without jax.
+* ``engine.ServeEngine`` — the LLM token-serving engine this repo's
+  seed shipped with.  It needs jax at import time, so it is *not*
+  re-exported here; import ``repro.serving.engine`` directly.
+"""
+
+from .service import (DEFAULT_BUCKET_ROWS, ServeRecord, ServeTicket,
+                      ServiceStats, SweepService)
+from .stream import ReplayReport, percentile, poisson_replay
+
+__all__ = [
+    "DEFAULT_BUCKET_ROWS",
+    "ReplayReport",
+    "ServeRecord",
+    "ServeTicket",
+    "ServiceStats",
+    "SweepService",
+    "percentile",
+    "poisson_replay",
+]

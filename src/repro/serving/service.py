@@ -1,0 +1,604 @@
+"""Streaming sweep service: continuous bucket batching over an open
+scenario stream.
+
+The offline :class:`~repro.core.sweep.SweepEngine` takes a closed
+scenario list, buckets it, runs, returns.  Production traffic is an
+open stream: scenarios arrive one at a time, each wants an answer
+quickly, and the service never exits.  :class:`SweepService` is the
+long-lived frontend for that mode, built from the same planning
+vocabulary the engine exposes (:func:`~repro.core.sweep.bucket_key`,
+:func:`~repro.core.sweep.build_batch_sim`,
+:func:`~repro.core.sweep.plan_chunk_rows`) so a scenario lands in the
+same compiled stepper whichever frontend dispatched it.
+
+The decomposition is the classic feeder / scheduler / worker split of
+LLM-serving simulators (Helix's ``ClusterSimulator``), one thread per
+stage:
+
+* **feeder** — callers (or :func:`repro.serving.stream.poisson_replay`)
+  call :meth:`SweepService.submit`; each scenario becomes a request
+  with a :class:`ServeTicket` the caller blocks on.  A result-cache
+  hit (content-based :func:`~repro.core.sweep.scenario_cache_key`)
+  resolves the ticket immediately, without touching the pipeline.
+* **scheduler** — the single owner of the *open buckets*: requests
+  pack continuously into the bucket for their envelope key, and a
+  bucket flushes when it is **full** (its fixed row capacity, sized by
+  the device-memory planner) or when its **deadline** expires
+  (``flush_deadline_s`` after the bucket opened — dispatch a
+  partially-filled bucket rather than blow the latency SLO; phantom
+  rows are already free).
+* **dispatcher** — builds the batch simulator for each flushed bucket
+  and launches it: jax buckets dispatch asynchronously and are handed
+  to the collector, vector buckets run synchronously in place.
+* **collector** — blocks on in-flight jax batches in dispatch order,
+  trims the phantom rows, and resolves every request with its result
+  and measured submit→result latency.
+
+**Compile-once contract.**  Every dispatched jax bucket has a shape
+signature fully determined by its service bucket key: the stacked
+power-of-two envelope (major *and* minor dims), a *fixed* row capacity
+(partial flushes are padded with phantom replicas of the last request,
+trimmed on fetch), and a fixed bound-schedule column count.  Steady
+state therefore reuses one persistent jitted stepper per
+(envelope, shard spec, policy) — the per-cache-key profiling layer
+(:class:`~repro.backends.jax.profile.SweepProfile`) proves it with
+``recompiles == 0``.
+
+Example (synchronous caller, numpy backend)::
+
+    >>> from repro.core import (listing2_graph, homogeneous_cluster,
+    ...                         scenario_grid)
+    >>> from repro.serving import SweepService
+    >>> cells = scenario_grid({"l2": listing2_graph()},
+    ...                       homogeneous_cluster(3), [6.0, 9.0],
+    ...                       ["equal-share"])
+    >>> with SweepService(executor="vector",
+    ...                   flush_deadline_s=0.01) as svc:
+    ...     tickets = [svc.submit(s) for s in cells]
+    ...     records = [t.result(timeout=30) for t in tickets]
+    >>> [r.ok for r in records]
+    [True, True]
+    >>> round(records[0].result.makespan, 1)
+    38.0
+
+See ``docs/serving.md`` for the architecture guide and the CLI
+walkthrough (``python -m repro.launch.serve --trace-corpus ...``).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as _futures
+import dataclasses
+import itertools
+import os
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.batchsim import BIG_EVENT_TIME, estimate_row_bytes
+from repro.core.simulator import SimResult
+from repro.core.sweep import (DEFAULT_MEMORY_BUDGET_MB, AssignmentCache,
+                              Scenario, _run_scenario, build_batch_sim,
+                              bucket_key, next_pow2, plan_backend,
+                              plan_chunk_rows, scenario_cache_key,
+                              scenario_dims)
+
+#: Default rows one service bucket holds before it force-flushes.  Kept
+#: deliberately small: the service optimizes latency under a deadline,
+#: not offline throughput, and a full bucket should fill well inside
+#: one ``flush_deadline_s`` at moderate arrival rates.
+DEFAULT_BUCKET_ROWS = 8
+
+
+@dataclass
+class ServeRecord:
+    """One resolved request: the offline ``SweepRecord`` fields plus
+    the streaming-side accounting (latency, cache, flush cause)."""
+
+    scenario: Scenario
+    result: Optional[SimResult]
+    error: Optional[str] = None
+    #: Which simulator answered: "jax", "vector", "event", or "cache".
+    backend: str = "event"
+    #: Why the request left the requested batched backend (None when it
+    #: ran there; mirrors ``SweepRecord.fallback_reason``).
+    fallback_reason: Optional[str] = None
+    #: Label of the dispatched bucket (None for cache hits/fallbacks).
+    bucket: Optional[str] = None
+    #: submit() -> resolved wall-clock, the service's headline metric.
+    latency_s: float = 0.0
+    #: True when the result came straight from the content cache.
+    cached: bool = False
+    #: "full" or "deadline" — what flushed the request's bucket.
+    flush_cause: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        """True when the request produced a result (no error)."""
+        return self.error is None
+
+
+class ServeTicket:
+    """Caller-side handle for one submitted scenario."""
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+        self._event = threading.Event()
+        self._record: Optional[ServeRecord] = None
+
+    def done(self) -> bool:
+        """True once the request has resolved (result or error)."""
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> ServeRecord:
+        """Block until resolved; raises :class:`TimeoutError` on
+        expiry.  The record is returned even when the request failed —
+        check :attr:`ServeRecord.ok` / ``error``."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.scenario.name!r} not resolved within "
+                f"{timeout}s")
+        return self._record
+
+    def _resolve(self, record: ServeRecord) -> None:
+        self._record = record
+        self._event.set()
+
+
+@dataclass
+class ServiceStats:
+    """A consistent snapshot of the service counters."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    cache_hits: int = 0
+    fallbacks: int = 0
+    buckets: int = 0
+    flushed_full: int = 0
+    flushed_deadline: int = 0
+    phantom_rows: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class _Request:
+    scenario: Scenario
+    ticket: ServeTicket
+    submit_t: float
+    cache_key: Optional[tuple]
+
+
+@dataclass
+class _OpenBucket:
+    key: tuple
+    backend: str
+    pad_dims: Tuple[int, int, int, int, int]
+    sched_cols: int
+    cap: int
+    deadline: float
+    requests: List[_Request] = field(default_factory=list)
+
+
+@dataclass
+class _Flush:
+    bucket: _OpenBucket
+    cause: str                      # "full" | "deadline"
+    label: str
+
+
+class _Close:
+    """Queue sentinel: shut the stage down after draining."""
+
+
+class _FlushAll:
+    """Inbox sentinel: flush every open bucket now (drain barrier)."""
+
+
+class SweepService:
+    """A long-lived scenario-sweep server with continuous batching.
+
+    ``executor`` is ``"jax"`` (compiled, async dispatch pipeline) or
+    ``"vector"`` (numpy batch backend; jax-free CI).  Requests whose
+    policy cannot run batched fall down the same
+    jax → vector → event chain as the offline engine, with the event
+    leg served by a small thread pool.
+
+    ``flush_deadline_s`` is the batching SLO knob: the longest a
+    request may wait in an open bucket for co-batchable traffic before
+    the bucket dispatches partially filled.  ``bucket_rows`` caps the
+    bucket capacity; the effective capacity is the smaller of it and
+    the device-memory planner's row budget
+    (``memory_budget_mb`` / ``REPRO_DEVICE_BUDGET_MB``, exactly like
+    the offline engine).
+
+    The service is a context manager; on exit it drains in-flight work
+    and joins its threads.  All public methods are thread-safe.
+    """
+
+    def __init__(self, executor: str = "jax",
+                 flush_deadline_s: float = 0.05,
+                 bucket_rows: int = DEFAULT_BUCKET_ROWS,
+                 vector_dt: float = 0.05,
+                 shard_devices: Optional[int] = None,
+                 memory_budget_mb: Optional[float] = None,
+                 result_cache: bool = True,
+                 fallback_workers: int = 2):
+        if executor not in ("jax", "vector"):
+            raise ValueError(f"unknown service executor {executor!r} "
+                             "(use 'jax' or 'vector')")
+        if flush_deadline_s <= 0:
+            raise ValueError("flush_deadline_s must be positive")
+        if bucket_rows < 1:
+            raise ValueError("bucket_rows must be >= 1")
+        self.executor = executor
+        self.flush_deadline_s = float(flush_deadline_s)
+        self.bucket_rows = int(bucket_rows)
+        self.vector_dt = float(vector_dt)
+        self.shard_devices = shard_devices
+        if memory_budget_mb is None:
+            memory_budget_mb = float(os.environ.get(
+                "REPRO_DEVICE_BUDGET_MB", DEFAULT_MEMORY_BUDGET_MB))
+        self.memory_budget_mb = float(memory_budget_mb)
+        self.result_cache = bool(result_cache)
+
+        from repro.backends.jax.profile import SweepProfile
+
+        #: Per-bucket compile/run/transfer profiles (PR 6 layer); the
+        #: smoke tests assert ``profile.recompiles == 0`` in steady
+        #: state.  Recorded at dispatch time, unconditionally.
+        self.profile = SweepProfile()
+
+        self._assignments = AssignmentCache()
+        self._cache: Dict[tuple, SimResult] = {}
+        self._lock = threading.Lock()          # counters + cache
+        self._stats = ServiceStats()
+        self._outstanding = 0
+        self._idle = threading.Condition(self._lock)
+        self._jax_align: Optional[int] = None
+        self._dims_cache: Dict[tuple, tuple] = {}
+        self._bucket_seq = itertools.count()
+
+        self._inbox: "queue.Queue" = queue.Queue()
+        self._dispatch_q: "queue.Queue" = queue.Queue()
+        self._fetch_q: "queue.Queue" = queue.Queue()
+        self._fallback_pool = _futures.ThreadPoolExecutor(
+            max_workers=fallback_workers,
+            thread_name_prefix="serve-fallback")
+        self._closed = False
+        self._threads = [
+            threading.Thread(target=self._scheduler_loop,
+                             name="serve-scheduler", daemon=True),
+            threading.Thread(target=self._dispatch_loop,
+                             name="serve-dispatcher", daemon=True),
+            threading.Thread(target=self._collect_loop,
+                             name="serve-collector", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ---------------------------------------------------------- lifecycle
+    def __enter__(self) -> "SweepService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Stop accepting requests, drain everything in flight, join
+        the worker threads.  Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._inbox.put(_Close)
+        for t in self._threads:
+            t.join()
+        self._fallback_pool.shutdown(wait=True)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Flush every open bucket and block until all submitted
+        requests have resolved (the warm-up barrier)."""
+        self._inbox.put(_FlushAll)
+        deadline = None if timeout is None \
+            else time.perf_counter() + timeout
+        with self._idle:
+            while self._outstanding > 0:
+                left = None if deadline is None \
+                    else deadline - time.perf_counter()
+                if left is not None and left <= 0:
+                    raise TimeoutError(
+                        f"{self._outstanding} requests still in flight "
+                        f"after {timeout}s")
+                self._idle.wait(timeout=left)
+
+    def stats(self) -> ServiceStats:
+        """A point-in-time copy of the service counters."""
+        with self._lock:
+            return dataclasses.replace(self._stats)
+
+    # ------------------------------------------------------------- feeder
+    def submit(self, scenario: Scenario) -> ServeTicket:
+        """Enqueue one scenario; returns immediately with a ticket.
+
+        A content-identical scenario answered before (and cacheable:
+        registry policy, no instances) resolves on the spot from the
+        result cache with ``backend="cache"``.
+        """
+        if self._closed:
+            raise RuntimeError("service is closed")
+        ticket = ServeTicket(scenario)
+        t0 = time.perf_counter()
+        key = scenario_cache_key(scenario) if self.result_cache else None
+        if key is not None:
+            with self._lock:
+                hit = self._cache.get(key)
+            if hit is not None:
+                with self._lock:
+                    self._stats.submitted += 1
+                    self._stats.completed += 1
+                    self._stats.cache_hits += 1
+                ticket._resolve(ServeRecord(
+                    scenario=scenario, result=hit, backend="cache",
+                    cached=True,
+                    latency_s=time.perf_counter() - t0))
+                return ticket
+        with self._lock:
+            self._stats.submitted += 1
+            self._outstanding += 1
+        self._inbox.put(_Request(scenario=scenario, ticket=ticket,
+                                 submit_t=t0, cache_key=key))
+        return ticket
+
+    def submit_many(self, scenarios: Sequence[Scenario]
+                    ) -> List[ServeTicket]:
+        """Submit a batch of scenarios back to back."""
+        return [self.submit(s) for s in scenarios]
+
+    # ---------------------------------------------------------- scheduler
+    def _service_key(self, backend: str, s: Scenario) -> tuple:
+        """The open-bucket identity: the engine's :func:`bucket_key`
+        extended with the power-of-two *minor* dims and the schedule
+        column count, so the dispatched shapes — and therefore the jit
+        signature — are a pure function of the key."""
+        base = bucket_key(backend, s, self._dims_cache)
+        minor = tuple(next_pow2(d)
+                      for d in scenario_dims(s, self._dims_cache)[2:])
+        sched = next_pow2(len(s.bound_schedule)) \
+            if s.bound_schedule else 0
+        return base + (minor, sched)
+
+    def _align(self, backend: str) -> int:
+        if backend != "jax":
+            return 1
+        if self._jax_align is None:
+            from repro.backends.jax.engine import shard_count
+
+            self._jax_align = shard_count(self.shard_devices, 1 << 30)
+        return self._jax_align
+
+    def _capacity(self, backend: str, pad_dims: tuple) -> int:
+        itemsize = 4 if backend == "jax" else 8
+        planned = plan_chunk_rows(
+            estimate_row_bytes(pad_dims, itemsize),
+            int(self.memory_budget_mb * 2 ** 20),
+            self._align(backend))
+        return max(1, min(self.bucket_rows, planned))
+
+    def _open_bucket(self, key: tuple, backend: str,
+                     s: Scenario, now: float) -> _OpenBucket:
+        (n, j), minor, sched_cols = key[-3], key[-2], key[-1]
+        pad_dims = (n, j) + minor
+        return _OpenBucket(key=key, backend=backend, pad_dims=pad_dims,
+                           sched_cols=sched_cols,
+                           cap=self._capacity(backend, pad_dims),
+                           deadline=now + self.flush_deadline_s)
+
+    def _scheduler_loop(self) -> None:
+        buckets: Dict[tuple, _OpenBucket] = {}
+
+        def flush(bucket: _OpenBucket, cause: str) -> None:
+            del buckets[bucket.key]
+            n, j = bucket.pad_dims[:2]
+            label = (f"serve:{bucket.backend}#{next(self._bucket_seq)}"
+                     f":padded(N{n},J{j})")
+            with self._lock:
+                self._stats.buckets += 1
+                if cause == "full":
+                    self._stats.flushed_full += 1
+                else:
+                    self._stats.flushed_deadline += 1
+            self._dispatch_q.put(_Flush(bucket=bucket, cause=cause,
+                                        label=label))
+
+        def flush_all() -> None:
+            for b in list(buckets.values()):
+                flush(b, "deadline")
+
+        def admit(req: _Request) -> None:
+            backend, reason = plan_backend(req.scenario, self.executor)
+            if backend not in ("jax", "vector"):
+                self._spawn_fallback(req, reason)
+                return
+            key = self._service_key(backend, req.scenario)
+            bucket = buckets.get(key)
+            if bucket is None:
+                bucket = self._open_bucket(key, backend, req.scenario,
+                                           time.perf_counter())
+                buckets[key] = bucket
+            bucket.requests.append(req)
+            if len(bucket.requests) >= bucket.cap:
+                flush(bucket, "full")
+
+        while True:
+            timeout = None
+            if buckets:
+                now = time.perf_counter()
+                timeout = max(0.0, min(b.deadline
+                                       for b in buckets.values()) - now)
+            try:
+                item = self._inbox.get(timeout=timeout)
+            except queue.Empty:
+                item = None
+            if item is _Close:
+                # a submit() racing close() may have enqueued behind
+                # the sentinel — drain so no ticket is orphaned
+                while True:
+                    try:
+                        late = self._inbox.get_nowait()
+                    except queue.Empty:
+                        break
+                    if isinstance(late, _Request):
+                        admit(late)
+                flush_all()
+                self._dispatch_q.put(_Close)
+                return
+            if item is _FlushAll:
+                flush_all()
+                continue
+            if item is not None:
+                admit(item)
+            # deadline sweep (runs on every wake-up, item or timeout)
+            now = time.perf_counter()
+            for b in [b for b in buckets.values() if b.deadline <= now]:
+                flush(b, "deadline")
+
+    # --------------------------------------------------------- dispatcher
+    def _padded_requests(self, flush: _Flush
+                         ) -> Tuple[List[Scenario], int]:
+        """The flush's scenarios grown to the bucket's fixed capacity:
+        phantom replicas of the last request keep the jax batch shape
+        a pure function of the bucket key (results are trimmed before
+        resolution), and the last row's bound schedule is padded with
+        inert ``BIG_EVENT_TIME`` entries so the schedule column count
+        is fixed too.  Vector buckets skip row padding (numpy has no
+        compile cache to keep warm)."""
+        bucket = flush.bucket
+        scens = [r.scenario for r in bucket.requests]
+        pad = 0
+        if bucket.backend == "jax":
+            pad = bucket.cap - len(scens)
+            scens = scens + [scens[-1]] * pad
+        if bucket.sched_cols:
+            last = scens[-1]
+            sched = list(last.bound_schedule)
+            sched += [(BIG_EVENT_TIME, sched[-1][1])] \
+                * (bucket.sched_cols - len(sched))
+            scens[-1] = dataclasses.replace(
+                last, bound_schedule=tuple(sched))
+        return scens, pad
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            item = self._dispatch_q.get()
+            if item is _Close:
+                self._fetch_q.put(_Close)
+                return
+            flush: _Flush = item
+            bucket = flush.bucket
+            live: List[_Request] = []
+            assignments: List = []
+            for req in bucket.requests:
+                try:
+                    assignments.append(
+                        self._assignments.assignment_for(req.scenario))
+                    live.append(req)
+                except Exception as e:  # noqa: BLE001 — per request
+                    self._resolve(req, None,
+                                  error=f"{type(e).__name__}: {e}",
+                                  backend=bucket.backend,
+                                  bucket=flush.label,
+                                  flush_cause=flush.cause)
+            if not live:
+                continue
+            bucket.requests = live
+            try:
+                scens, pad = self._padded_requests(flush)
+                assignments = assignments + [assignments[-1]] * pad
+                sim = build_batch_sim(
+                    bucket.backend, scens, assignments, False,
+                    bucket.pad_dims, vector_dt=self.vector_dt,
+                    shard_devices=self.shard_devices)
+                with self._lock:
+                    self._stats.phantom_rows += pad
+                if bucket.backend == "jax":
+                    pending = sim.dispatch()
+                    pending.profile.bucket = flush.label
+                    # recorded at dispatch, unconditionally: a failed
+                    # fetch must still show up in the profile
+                    self.profile.add(pending.profile)
+                    self._fetch_q.put((flush, sim, pending))
+                else:
+                    self._resolve_flush(flush, sim.run())
+            except Exception as e:  # noqa: BLE001 — captured per bucket
+                self._fail_flush(flush, f"{type(e).__name__}: {e}")
+
+    # ---------------------------------------------------------- collector
+    def _collect_loop(self) -> None:
+        while True:
+            item = self._fetch_q.get()
+            if item is _Close:
+                return
+            flush, sim, pending = item
+            try:
+                self._resolve_flush(flush, sim.fetch(pending))
+            except Exception as e:  # noqa: BLE001 — captured per bucket
+                self._fail_flush(flush, f"{type(e).__name__}: {e}")
+
+    # ---------------------------------------------------------- resolution
+    def _resolve(self, req: _Request, result: Optional[SimResult], *,
+                 error: Optional[str] = None, backend: str = "event",
+                 bucket: Optional[str] = None,
+                 fallback_reason: Optional[str] = None,
+                 flush_cause: Optional[str] = None) -> None:
+        record = ServeRecord(
+            scenario=req.scenario, result=result, error=error,
+            backend=backend, bucket=bucket,
+            fallback_reason=fallback_reason, flush_cause=flush_cause,
+            latency_s=time.perf_counter() - req.submit_t)
+        with self._idle:
+            self._stats.completed += 1
+            if error is not None:
+                self._stats.failed += 1
+            if error is None and req.cache_key is not None:
+                self._cache[req.cache_key] = result
+            self._outstanding -= 1
+            if self._outstanding == 0:
+                self._idle.notify_all()
+        req.ticket._resolve(record)
+
+    def _resolve_flush(self, flush: _Flush,
+                       results: List[SimResult]) -> None:
+        for req, result in zip(flush.bucket.requests, results):
+            self._resolve(req, result, backend=flush.bucket.backend,
+                          bucket=flush.label, flush_cause=flush.cause)
+
+    def _fail_flush(self, flush: _Flush, err: str) -> None:
+        for req in flush.bucket.requests:
+            self._resolve(req, None, error=err,
+                          backend=flush.bucket.backend,
+                          bucket=flush.label, flush_cause=flush.cause)
+
+    # ----------------------------------------------------------- fallback
+    def _spawn_fallback(self, req: _Request,
+                        reason: Optional[str]) -> None:
+        with self._lock:
+            self._stats.fallbacks += 1
+
+        def run() -> None:
+            try:
+                assignment = self._assignments.assignment_for(
+                    req.scenario)
+                result = _run_scenario(req.scenario, assignment)
+                self._resolve(req, result, backend="event",
+                              fallback_reason=reason)
+            except Exception as e:  # noqa: BLE001 — captured per request
+                self._resolve(req, None,
+                              error=f"{type(e).__name__}: {e}",
+                              backend="event", fallback_reason=reason)
+
+        self._fallback_pool.submit(run)

@@ -181,6 +181,78 @@ class TestDispatchPipeline:
                                                     rel=1e-5)
         assert pending.profile.transfer_s >= 0.0
 
+    @pytest.mark.parametrize("pipeline", [True, False])
+    def test_failed_fetch_keeps_profile(self, monkeypatch, pipeline):
+        """Profiles are recorded at *dispatch*: a bucket whose fetch
+        explodes must still appear in ``SweepResult.profile`` — under
+        both the pipelined and the sequential dispatch paths (the
+        sequential path used to drop it)."""
+        from repro.core import SweepEngine, scenario_grid
+
+        def exploding_fetch(self, pending):
+            raise RuntimeError("transfer lost")
+
+        monkeypatch.setattr(JaxBatchSimulator, "fetch", exploding_fetch)
+        grid = scenario_grid({"l2": listing2_graph()},
+                             homogeneous_cluster(3), [6.0, 9.0],
+                             ["equal-share"])
+        result = SweepEngine(executor="jax", pipeline=pipeline).run(grid)
+        assert len(result.failures) == len(grid)
+        assert all("transfer lost" in r.error for r in result.failures)
+        assert result.profile is not None
+        assert len(result.profile.buckets) == 1
+        assert result.profile.buckets[0].bucket \
+            == result.failures[0].bucket
+
+    def test_compile_attribution_is_per_cache_key(self, monkeypatch):
+        """Interleaved dispatches of a warm envelope and a fresh one:
+        ``compiled`` lands on the fresh bucket only.  The old global
+        cache-size delta charged whichever dispatch raced the check."""
+        from repro.backends.jax import engine
+
+        monkeypatch.setattr(engine, "_compiled_keys", set())
+        g = listing2_graph()
+        specs = homogeneous_cluster(3)
+        warm = JaxBatchSimulator(g, specs, [6.0, 9.0])
+        p1 = warm.dispatch()            # claims the envelope's key
+        again = JaxBatchSimulator(g, specs, [2.5, 12.0])
+        p2 = again.dispatch()           # same key -> cached
+        fresh = JaxBatchSimulator(g, specs, [6.0, 9.0],
+                                  policy="oracle")
+        p3 = fresh.dispatch()           # new policy -> new key
+        assert p1.profile.compiled is True
+        assert p2.profile.compiled is False
+        assert p3.profile.compiled is True
+        assert p2.profile.cache_key == p1.profile.cache_key
+        assert p3.profile.cache_key != p1.profile.cache_key
+        assert p2.profile.compile_s == 0.0
+        for sim, pending in ((warm, p1), (again, p2), (fresh, p3)):
+            assert len(sim.fetch(pending)) == 2
+
+    def test_claim_cache_key_single_winner_under_threads(self):
+        """Concurrent dispatches of one envelope must attribute the
+        compile to exactly one of them."""
+        import threading
+
+        from repro.backends.jax.engine import _claim_cache_key
+
+        key = ("claim-race-test", 0)
+        wins = []
+        barrier = threading.Barrier(8)
+
+        def claim():
+            barrier.wait()
+            if _claim_cache_key(key):
+                wins.append(1)
+
+        threads = [threading.Thread(target=claim) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(wins) == 1
+        assert _claim_cache_key(key) is False
+
     def test_rerun_is_compile_free(self):
         """Re-running the same mixed family through the sweep engine
         must hit the jit cache on every bucket: the cache key (padding

@@ -1,0 +1,346 @@
+"""Streaming sweep service (ISSUE 7).
+
+The vector-backed classes cover the service's orchestration contract
+without jax: continuous bucket packing, full-vs-deadline flushes,
+per-request latency, the content-based result cache, the event
+fallback leg, per-request failure isolation, and the Poisson replay
+driver.  ``TestJaxService`` (guarded) adds the compile-once contract:
+phantom-row padding keeps every dispatch of one envelope on a single
+jit signature, so a long-lived service never recompiles in steady
+state.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (homogeneous_cluster, listing2_graph,
+                        listing2_uniform, scenario_grid, simulate)
+from repro.core.sweep import Scenario, scenario_cache_key
+from repro.serving import (ReplayReport, ServeRecord, SweepService,
+                           percentile, poisson_replay)
+from repro.serving import service as service_mod
+
+
+def grid(bounds=(6.0, 9.0), policies=("equal-share",), **kwargs):
+    return scenario_grid({"l2": listing2_graph()},
+                         homogeneous_cluster(3), list(bounds),
+                         list(policies), **kwargs)
+
+
+def svc(**kwargs):
+    kwargs.setdefault("executor", "vector")
+    kwargs.setdefault("flush_deadline_s", 0.02)
+    return SweepService(**kwargs)
+
+
+class TestSubmitResolve:
+    def test_matches_event_simulator(self):
+        cells = grid(bounds=(2.5, 6.0, 12.0))
+        with svc() as service:
+            records = [t.result(timeout=30)
+                       for t in service.submit_many(cells)]
+        for s, rec in zip(cells, records):
+            assert rec.ok and rec.backend == "vector"
+            ref = simulate(s.graph, list(s.specs), s.bound_w, s.policy)
+            assert rec.result.makespan == pytest.approx(ref.makespan,
+                                                        rel=0.02)
+            assert rec.latency_s > 0
+            assert rec.bucket is not None
+
+    def test_full_flush_before_deadline(self):
+        # capacity 2 -> the second submit flushes the bucket "full",
+        # long before the (deliberately huge) deadline
+        with svc(bucket_rows=2, flush_deadline_s=30.0) as service:
+            t0 = time.perf_counter()
+            records = [t.result(timeout=30)
+                       for t in service.submit_many(grid())]
+            elapsed = time.perf_counter() - t0
+        assert elapsed < 5.0
+        assert all(r.flush_cause == "full" for r in records)
+        assert service.stats().flushed_full == 1
+
+    def test_deadline_flush_of_partial_bucket(self):
+        with svc(bucket_rows=64, flush_deadline_s=0.02) as service:
+            rec = service.submit(grid(bounds=(6.0,))[0]).result(
+                timeout=30)
+        assert rec.ok and rec.flush_cause == "deadline"
+        assert rec.latency_s >= 0.02
+        assert service.stats().flushed_deadline == 1
+
+    def test_mixed_shapes_open_separate_buckets(self):
+        from repro.core.workloads import layered_dag
+
+        big = layered_dag(n_nodes=5, seed=3)
+        cells = grid(bounds=(6.0,)) + scenario_grid(
+            {"big": big}, homogeneous_cluster(5), [6.0],
+            ["equal-share"])
+        with svc() as service:
+            records = [t.result(timeout=30)
+                       for t in service.submit_many(cells)]
+        assert all(r.ok for r in records)
+        # 3-node listing2 and the 5-node layered DAG pad to different
+        # (N, J) envelopes, so they cannot share an open bucket
+        assert len({r.bucket for r in records}) == 2
+
+    def test_bound_schedule_rows(self):
+        cells = grid(bounds=(9.0,),
+                     bound_schedule=((15.0, 4.0), (30.0, 9.0)))
+        with svc() as service:
+            rec = service.submit(cells[0]).result(timeout=30)
+        ref = simulate(cells[0].graph, list(cells[0].specs), 9.0,
+                       "equal-share",
+                       bound_schedule=((15.0, 4.0), (30.0, 9.0)))
+        assert rec.ok
+        assert rec.result.makespan == pytest.approx(ref.makespan,
+                                                    rel=0.02)
+
+    def test_ticket_timeout_raises(self):
+        with svc(flush_deadline_s=5.0, bucket_rows=64) as service:
+            ticket = service.submit(grid(bounds=(6.0,))[0])
+            with pytest.raises(TimeoutError, match="not resolved"):
+                ticket.result(timeout=0.01)
+            assert ticket.result(timeout=30).ok
+
+
+class TestResultCache:
+    def test_repeat_submission_hits_cache(self):
+        cells = grid()
+        with svc() as service:
+            first = [t.result(30) for t in service.submit_many(cells)]
+            again = [t.result(30) for t in service.submit_many(cells)]
+        assert not any(r.cached for r in first)
+        assert all(r.cached and r.backend == "cache" for r in again)
+        assert service.stats().cache_hits == len(cells)
+        for a, b in zip(first, again):
+            assert b.result.makespan == a.result.makespan
+
+    def test_cache_can_be_disabled(self):
+        cells = grid()
+        with svc(result_cache=False) as service:
+            _ = [t.result(30) for t in service.submit_many(cells)]
+            again = [t.result(30) for t in service.submit_many(cells)]
+        assert not any(r.cached for r in again)
+        assert service.stats().cache_hits == 0
+
+    def test_policy_instances_are_uncacheable(self):
+        from repro.policies import get_policy
+
+        cell = grid(policies=[get_policy("equal-share")])[0]
+        assert scenario_cache_key(cell) is None
+        with svc() as service:
+            first = service.submit(cell).result(30)
+            again = service.submit(cell).result(30)
+        assert first.ok and again.ok and not again.cached
+
+
+class TestFallbackAndFailure:
+    def test_policy_instance_falls_back_to_event(self):
+        from repro.policies import get_policy
+
+        cell = grid(policies=[get_policy("equal-share")])[0]
+        with svc() as service:
+            rec = service.submit(cell).result(timeout=30)
+        assert rec.ok and rec.backend == "event"
+        assert rec.fallback_reason == "policy-instance"
+        assert service.stats().fallbacks == 1
+        ref = simulate(cell.graph, list(cell.specs), cell.bound_w,
+                       "equal-share")
+        assert rec.result.makespan == pytest.approx(ref.makespan)
+
+    def test_batch_failure_is_isolated_per_request(self, monkeypatch):
+        # a bucket whose build explodes fails its own requests with the
+        # error captured on the record — later traffic is unaffected
+        real = service_mod.build_batch_sim
+
+        def exploding(*args, **kwargs):
+            raise RuntimeError("device on fire")
+
+        monkeypatch.setattr(service_mod, "build_batch_sim", exploding)
+        with svc() as service:
+            bad = [t.result(30) for t in service.submit_many(grid())]
+            monkeypatch.setattr(service_mod, "build_batch_sim", real)
+            good = service.submit(grid(bounds=(2.5,))[0]).result(30)
+        assert all(not r.ok for r in bad)
+        assert all("device on fire" in r.error for r in bad)
+        assert good.ok
+        assert service.stats().failed == 2
+
+    def test_assignment_failure_fails_only_its_request(self):
+        class Exploding:
+            def assignment_for(self, s):
+                if s.bound_w < 7.0:
+                    raise RuntimeError("infeasible")
+                return None
+
+        with svc() as service:
+            service._assignments = Exploding()
+            records = [t.result(30)
+                       for t in service.submit_many(grid())]
+        bad, good = records
+        assert not bad.ok and "infeasible" in bad.error
+        assert good.ok
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="executor"):
+            SweepService(executor="thread")
+        with pytest.raises(ValueError, match="flush_deadline_s"):
+            SweepService(flush_deadline_s=0.0)
+        with pytest.raises(ValueError, match="bucket_rows"):
+            SweepService(executor="vector", bucket_rows=0)
+
+
+class TestLifecycle:
+    def test_drain_barrier(self):
+        with svc(bucket_rows=64, flush_deadline_s=10.0) as service:
+            tickets = service.submit_many(grid())
+            # open bucket holds both requests; drain must flush it
+            service.drain(timeout=30)
+            assert all(t.done() for t in tickets)
+
+    def test_drain_timeout(self):
+        with svc() as service:
+            with pytest.raises(TimeoutError, match="in flight"):
+                service._outstanding += 1  # simulate a stuck request
+                try:
+                    service.drain(timeout=0.05)
+                finally:
+                    service._outstanding -= 1
+
+    def test_close_is_idempotent_and_final(self):
+        service = svc()
+        ticket = service.submit(grid(bounds=(6.0,))[0])
+        service.close()
+        service.close()
+        assert ticket.result(timeout=1).ok  # drained on close
+        with pytest.raises(RuntimeError, match="closed"):
+            service.submit(grid(bounds=(6.0,))[0])
+
+    def test_concurrent_submitters(self):
+        cells = grid(bounds=(2.5, 6.0, 9.0, 12.0),
+                     policies=("equal-share", "oracle"))
+        results = {}
+
+        def feed(i, s, service):
+            results[i] = service.submit(s).result(timeout=30)
+
+        with svc() as service:
+            threads = [threading.Thread(target=feed,
+                                        args=(i, s, service))
+                       for i, s in enumerate(cells)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        assert len(results) == len(cells)
+        assert all(r.ok for r in results.values())
+        stats = service.stats()
+        assert stats.completed == stats.submitted == len(cells)
+
+
+class TestStream:
+    def test_percentile_nearest_rank(self):
+        vals = [0.4, 0.1, 0.3, 0.2]
+        assert percentile(vals, 50) == 0.2
+        assert percentile(vals, 99) == 0.4
+        assert percentile(vals, 0) == 0.1
+        assert percentile([7.0], 50) == 7.0
+        with pytest.raises(ValueError, match="empty"):
+            percentile([], 50)
+        with pytest.raises(ValueError, match="pct"):
+            percentile(vals, 101)
+
+    def test_poisson_replay_preserves_order(self):
+        cells = grid(bounds=(2.5, 6.0, 9.0))
+        with svc() as service:
+            report = poisson_replay(service, cells, rate_hz=500.0,
+                                    seed=3, timeout_s=30)
+        assert [r.scenario for r in report.records] == cells
+        assert report.throughput > 0
+        summary = report.to_dict()
+        assert summary["requests"] == 3 and summary["failures"] == 0
+        assert summary["latency_p50_s"] <= summary["latency_p99_s"]
+
+    def test_replay_rejects_bad_rate(self):
+        with svc() as service:
+            with pytest.raises(ValueError, match="rate_hz"):
+                poisson_replay(service, grid(), rate_hz=0.0)
+
+    def test_report_partitions(self):
+        ok = ServeRecord(scenario=None, result=None, latency_s=0.1)
+        bad = ServeRecord(scenario=None, result=None, error="x",
+                          latency_s=0.2)
+        fb = ServeRecord(scenario=None, result=None,
+                         fallback_reason="policy-instance",
+                         latency_s=0.3)
+        rep = ReplayReport(records=[ok, bad, fb], wall_s=1.0)
+        assert rep.failures == [bad]
+        assert rep.fallbacks == [fb]
+        assert rep.throughput == 3.0
+        assert rep.latency_pct(50) == 0.2
+
+
+from repro.backends import jax as jax_backend  # noqa: E402
+
+jax_service = pytest.mark.skipif(not jax_backend.HAS_JAX,
+                                 reason="jax not installed")
+
+
+@jax_service
+class TestJaxService:
+    def test_compile_once_across_waves(self, monkeypatch):
+        """Partial flushes pad to the bucket's fixed capacity, so every
+        dispatch of one envelope reuses one jit signature: a second
+        wave with fresh bounds compiles nothing."""
+        from repro.backends.jax import engine
+
+        # Compile attribution is per process-wide cache key; start from a
+        # clean registry so wave1 counts as this test's own warm-up even
+        # when an earlier suite already compiled the same envelope.
+        monkeypatch.setattr(engine, "_compiled_keys", set())
+        with SweepService(executor="jax", flush_deadline_s=0.02,
+                          bucket_rows=4) as service:
+            wave1 = [t.result(120) for t in
+                     service.submit_many(grid(bounds=(6.0, 9.0)))]
+            service.drain(timeout=60)
+            warm = len(service.profile.buckets)
+            assert service.profile.compiles >= 1
+            wave2 = [t.result(120) for t in
+                     service.submit_many(grid(bounds=(5.0, 8.0, 11.0)))]
+            profile = service.profile
+        assert all(r.ok and r.backend == "jax" for r in wave1 + wave2)
+        assert profile.recompiles == 0
+        assert profile.compiles_after(warm) == 0
+        assert len(profile.buckets) > warm  # wave2 really dispatched
+
+    def test_phantom_rows_trimmed(self):
+        cells = grid(bounds=(2.5, 6.0, 12.0))
+        with SweepService(executor="jax", flush_deadline_s=0.02,
+                          bucket_rows=8) as service:
+            records = [t.result(120)
+                       for t in service.submit_many(cells)]
+            assert service.stats().phantom_rows >= 5
+        assert len(records) == len(cells)
+        for s, rec in zip(cells, records):
+            ref = simulate(s.graph, list(s.specs), s.bound_w, s.policy)
+            assert rec.result.makespan == pytest.approx(ref.makespan,
+                                                        rel=1e-5)
+
+    def test_matches_offline_sweep_engine(self):
+        from repro.core import SweepEngine
+
+        cells = scenario_grid(
+            {"l2": listing2_graph(), "u10": listing2_uniform(10.0)},
+            homogeneous_cluster(3), [2.5, 6.0, 9.0],
+            ["equal-share", "oracle"])
+        offline = SweepEngine(executor="jax").run(cells)
+        assert not offline.failures
+        with SweepService(executor="jax",
+                          flush_deadline_s=0.02) as service:
+            records = [t.result(120)
+                       for t in service.submit_many(cells)]
+        for off, rec in zip(offline.records, records):
+            assert rec.ok
+            assert rec.result.makespan == pytest.approx(
+                off.result.makespan, abs=1e-6)

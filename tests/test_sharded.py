@@ -73,6 +73,45 @@ class TestPlanner:
         assert plan_chunk_rows(10_000, 1000, align=4) == 4
         assert plan_chunk_rows(10_000, 1000) == 1
 
+    def test_zero_row_bytes_is_budget_bound(self):
+        # a degenerate zero-byte row estimate must not divide by zero;
+        # the cap degrades to the aligned row budget
+        assert plan_chunk_rows(0, 1000, align=1) == 1000
+        assert plan_chunk_rows(0, 1000, align=4) == 1000
+        assert plan_chunk_rows(0, 1000, align=3) == 999
+
+    def test_zero_budget_still_dispatches_one_shard(self):
+        assert plan_chunk_rows(100, 0) == 1
+        assert plan_chunk_rows(100, 0, align=4) == 4
+
+    def test_align_wider_than_budget_wins(self):
+        # 5 rows fit, but the shard width is 8: the documented minimum
+        # is one full shard width even over budget
+        assert plan_chunk_rows(100, 500, align=8) == 8
+
+    def test_non_pow2_align(self):
+        # nothing in the planner assumes power-of-two device counts
+        assert plan_chunk_rows(100, 1000, align=3) == 9
+        assert plan_chunk_rows(100, 1000, align=7) == 7
+        assert plan_chunk_rows(100, 70, align=1) == 1
+
+    def test_cap_never_exceeds_budget_except_one_shard_minimum(self):
+        """Property sweep: the cap is always a positive multiple of the
+        shard width, and it only exceeds the byte budget in the one
+        documented case — the single-shard minimum dispatch."""
+        import random
+
+        rng = random.Random(7)
+        for _ in range(500):
+            row_bytes = rng.choice([0, 1, 7, 64, 1000, 10 ** 6])
+            budget = rng.choice([0, 1, 999, 2 ** 10, 2 ** 20])
+            align = rng.choice([1, 2, 3, 4, 7, 8, 16])
+            cap = plan_chunk_rows(row_bytes, budget, align)
+            assert cap >= align >= 1
+            assert cap % align == 0
+            if cap > align:  # above the minimum, the budget binds
+                assert cap * row_bytes <= budget
+
     def test_budget_splits_buckets_without_changing_results(self):
         grid = family_grid()
         base = SweepEngine(executor="jax").run(grid)

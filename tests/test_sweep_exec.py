@@ -1,0 +1,80 @@
+"""Process-executor start-method regression (ISSUE 7).
+
+Forking a process after JAX initializes its runtime thread pools is a
+documented deadlock risk — jax emits ``RuntimeWarning: os.fork() was
+called ...`` from its at-fork hook, and a forked worker can hang
+inside XLA locks.  Every process pool in :mod:`repro.core.sweep` must
+therefore use the ``spawn`` start method.  These tests run with
+``RuntimeWarning`` promoted to an error (CI additionally runs them
+under ``-W error::RuntimeWarning``), so a regression to the platform
+default ``fork`` fails loudly instead of deadlocking a future run.
+"""
+
+import importlib.util
+import warnings
+
+import pytest
+
+from repro.core import SweepEngine, homogeneous_cluster, listing2_graph
+from repro.core.sweep import _process_pool, scenario_grid
+
+HAS_JAX = importlib.util.find_spec("jax") is not None
+
+
+def _init_jax_threads():
+    """Put jax in the dangerous state: runtime initialized, thread
+    pools live.  A subsequent ``fork`` is what the spawn fix
+    prevents."""
+    if HAS_JAX:
+        import jax
+        import jax.numpy as jnp
+
+        jax.device_get(jnp.ones(4) * 2)
+
+
+class TestSpawnContext:
+    def test_process_pool_uses_spawn(self):
+        with _process_pool(max_workers=1) as pool:
+            assert pool._mp_context.get_start_method() == "spawn"
+            assert pool.submit(max, 2, 3).result(timeout=60) == 3
+
+    def test_sweep_run_emits_no_fork_warning(self):
+        _init_jax_threads()
+        cells = scenario_grid({"l2": listing2_graph()},
+                              homogeneous_cluster(3), [6.0, 9.0],
+                              ["equal-share"])
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            result = SweepEngine(executor="process",
+                                 max_workers=2).run(cells)
+        assert not result.failures
+        assert len(result.records) == 2
+
+    def test_engine_map_emits_no_fork_warning(self):
+        _init_jax_threads()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            records = SweepEngine(executor="process", max_workers=2) \
+                .map(len, [(1, 2), (3,), ()])
+        assert [r.value for r in records] == [2, 1, 0]
+        assert all(r.ok for r in records)
+
+    @pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+    def test_process_workers_survive_jax_parent(self):
+        """The actual deadlock scenario: jax-initialized parent, ILP
+        shared setup in-process, simulation in spawned workers."""
+        _init_jax_threads()
+        cells = scenario_grid({"l2": listing2_graph()},
+                              homogeneous_cluster(3), [6.0],
+                              ["equal-share", "oracle"])
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            result = SweepEngine(executor="process",
+                                 max_workers=2).run(cells)
+        assert not result.failures
+        from repro.core import simulate
+
+        ref = simulate(listing2_graph(), homogeneous_cluster(3), 6.0,
+                       "equal-share")
+        assert result.records[0].result.makespan \
+            == pytest.approx(ref.makespan)
