@@ -1,0 +1,113 @@
+"""Cluster scheduler benchmark: outer policies over the bundled 1k-job
+arrival trace.
+
+Loads ``examples/cluster/arrivals_1k.jsonl`` (quick mode slices the
+first 150 arrivals), calibrates one shared
+:class:`~repro.cluster.RateModel` on the requested batched backend,
+runs every registered outer policy through the discrete-event
+scheduler, and replays each policy's realized per-job
+``bound_schedule``\\ s as one padded sweep — zero event fallbacks and
+(on jax) zero recompiles are hard failures, as is ``power-aware``
+losing to ``fifo-equal-split`` on makespan.  Deposits
+``BENCH_RECORDS["cluster_sched"]`` (written to ``BENCH_cluster.json``
+in CI).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import List
+
+from .common import BENCH_RECORDS, csv_line
+
+TRACE_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "examples" / "cluster" / "arrivals_1k.jsonl"
+
+POLICIES = ("fifo-equal-split", "backfill", "power-aware", "fair-share")
+
+
+def main(quick: bool = True, backend: str = "event") -> List[str]:
+    from repro.cluster import (ArrivalTrace, RateModel,
+                               ClusterScheduler, load_arrivals, replay,
+                               report, suggest_bound)
+
+    executor = "vector"
+    if backend == "jax":
+        try:
+            import jax  # noqa: F401 — availability probe
+            executor = "jax"
+        except ImportError:
+            print("jax not installed; falling back to vector")
+    trace = load_arrivals(TRACE_PATH)
+    if quick:
+        trace = ArrivalTrace(list(trace.members.values()),
+                             trace.jobs[:150], meta=trace.meta)
+    nodes, frac = 12, 0.5
+    bound = suggest_bound(trace, total_nodes=nodes, frac=frac)
+    print(f"{len(trace)} jobs / {len(trace.members)} members on "
+          f"{nodes} nodes, bound {bound:.1f} W, executor {executor}")
+
+    t0 = time.perf_counter()
+    model = RateModel(trace, executor=executor, levels=6)
+    cal = model.calibrate()
+    cal_s = time.perf_counter() - t0
+    if cal.event_fallbacks():
+        raise RuntimeError(f"{len(cal.event_fallbacks())} calibration "
+                           f"event fallbacks")
+    print(f"calibration: {cal.backend_summary()}")
+
+    record = {"executor": executor, "jobs": len(trace), "nodes": nodes,
+              "bound_w": bound, "calibrate_s": cal_s, "policies": {}}
+    makespans = {}
+    replay_s_total = 0.0
+    print(f"{'policy':>18} {'makespan':>10} {'jobs/s':>8} "
+          f"{'wait.p99':>10} {'slo':>6} {'util':>6} {'relerr':>8} "
+          f"{'replay':>8}")
+    for policy in POLICIES:
+        t0 = time.perf_counter()
+        result = ClusterScheduler(trace, bound_w=bound,
+                                  total_nodes=nodes, policy=policy,
+                                  model=model).run()
+        des_s = time.perf_counter() - t0
+        rep = report(result)
+        t0 = time.perf_counter()
+        chk = replay(result, executor=executor)
+        rep_s = time.perf_counter() - t0
+        replay_s_total += rep_s
+        if chk.event_fallbacks:
+            raise RuntimeError(f"{policy}: {chk.event_fallbacks} "
+                               f"replay event fallbacks")
+        if executor == "jax" and chk.recompiles:
+            raise RuntimeError(f"{policy}: {chk.recompiles} replay "
+                               f"recompiles")
+        makespans[policy] = rep.makespan
+        print(f"{policy:>18} {rep.makespan:>9.1f}s "
+              f"{rep.throughput:>8.3f} {rep.wait_p99:>9.1f}s "
+              f"{rep.slo_attainment:>6.0%} {rep.util_mean:>6.0%} "
+              f"{chk.max_rel_err:>8.1%} {rep_s:>7.1f}s")
+        entry = rep.as_dict()
+        entry.update(des_s=des_s, replay_s=rep_s,
+                     replay_max_rel_err=chk.max_rel_err,
+                     replay_mean_rel_err=chk.mean_rel_err,
+                     event_fallbacks=chk.event_fallbacks,
+                     recompiles=chk.recompiles)
+        record["policies"][policy] = entry
+
+    ratio = makespans["power-aware"] / makespans["fifo-equal-split"]
+    print(f"power-aware vs fifo-equal-split makespan: {ratio:.3f}x")
+    if ratio >= 1.0:
+        raise RuntimeError(f"power-aware ({makespans['power-aware']:.1f}s)"
+                           f" does not beat fifo-equal-split "
+                           f"({makespans['fifo-equal-split']:.1f}s)")
+    record["power_aware_vs_fifo"] = ratio
+    BENCH_RECORDS["cluster_sched"] = record
+    per_job_us = 1e6 * replay_s_total / (len(trace) * len(POLICIES))
+    return [csv_line("cluster_sched", per_job_us,
+                     f"power-aware {ratio:.3f}x fifo makespan | "
+                     f"{len(trace)} jobs x {len(POLICIES)} policies | "
+                     f"0 fallbacks [{executor}]")]
+
+
+if __name__ == "__main__":
+    main(quick=True, backend="jax")

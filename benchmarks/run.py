@@ -15,12 +15,41 @@ import inspect
 import sys
 
 
+#: The benchmark registry: name -> (module attribute path, one-line
+#: description).  ``--list`` prints it; unknown ``--only`` names fail
+#: against it with the available set.
+BENCHES = {
+    "depth_tables": ("depth_tables", "Tables I & II: policy depth vs "
+                     "makespan on the Listing-2 graphs"),
+    "fig8": ("fig8_power_sweep", "Fig. 8 power sweep (+ uniform §VI "
+             "variant) on the 500-cell grid"),
+    "fig9": ("fig9_stddev_sweep", "Fig. 9 skew (stddev) sweep"),
+    "npb": ("npb_analogues", "Figs. 11-13 NPB analogue workloads "
+            "(IS/EP/CG)"),
+    "family": ("family_sweep", "mixed-shape scenario families as "
+               "padded batched buckets"),
+    "sharded": ("sharded_sweep", "multi-device sharded sweep scaling"),
+    "trace-replay": ("trace_replay", "MPI trace corpus ingest + "
+                     "calibrated replay sweep"),
+    "serve": ("serve_stream", "streaming SweepService under a Poisson "
+              "open-loop load"),
+    "cluster": ("cluster_sched", "outer cluster policies over the "
+                "bundled 1k-job arrival trace"),
+    "lm_workloads": ("lm_workloads", "pipeline-parallel / MoE "
+                     "training-step graphs"),
+    "roofline": ("roofline_report", "§Roofline table: kernel arithmetic "
+                 "intensity"),
+}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="full problem classes / sweep resolutions")
     ap.add_argument("--only", "--workload", dest="only", default=None,
-                    help="comma-separated bench names")
+                    help="comma-separated bench names (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="list available benchmarks and exit")
     ap.add_argument("--list-policies", action="store_true",
                     help="list registered power policies and exit")
     ap.add_argument("--backend", choices=("event", "vector", "jax"),
@@ -36,6 +65,11 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     quick = not args.full
 
+    if args.list:
+        for name, (_, desc) in BENCHES.items():
+            print(f"{name:<14s} {desc}")
+        return 0
+
     if args.list_policies:
         from repro.policies import available_policies, get_policy
 
@@ -46,27 +80,18 @@ def main(argv=None) -> int:
             print(f"{name:<14s} {cls.__name__:<24s} {doc}")
         return 0
 
+    import importlib
+
     from repro.core import SweepEngine
 
-    from . import (depth_tables, family_sweep, fig8_power_sweep,
-                   fig9_stddev_sweep, lm_workloads, npb_analogues,
-                   roofline_report, serve_stream, sharded_sweep,
-                   trace_replay)
-
-    benches = {
-        "depth_tables": depth_tables.main,        # Tables I & II
-        "fig8": fig8_power_sweep.main,            # Fig. 8 (+ uniform §VI)
-        "fig9": fig9_stddev_sweep.main,           # Fig. 9
-        "npb": npb_analogues.main,                # Figs. 11-13
-        "family": family_sweep.main,              # mixed scenario families
-        "sharded": sharded_sweep.main,            # multi-device scaling
-        "trace-replay": trace_replay.main,        # corpus ingest + sweep
-        "serve": serve_stream.main,               # streaming service
-        "lm_workloads": lm_workloads.main,        # pipeline/MoE graphs
-        "roofline": roofline_report.main,         # §Roofline table
-    }
     only = set(args.only.split(",")) if args.only else None
-    todo = [(name, fn) for name, fn in benches.items()
+    if only:
+        unknown = sorted(only - set(BENCHES))
+        if unknown:
+            ap.error(f"unknown benchmark(s) {', '.join(unknown)}; "
+                     f"available: {', '.join(BENCHES)}")
+    todo = [(name, importlib.import_module(f".{mod}", __package__).main)
+            for name, (mod, _) in BENCHES.items()
             if not only or name in only]
 
     def run_bench(item):

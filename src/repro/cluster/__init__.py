@@ -1,0 +1,38 @@
+"""Cluster-level job-arrival scheduling under a shared power bound.
+
+The paper's simulator optimizes power *within* one MPI application;
+this package adds the level above: a power-capped facility running a
+**queue** of such applications.  Seeded arrival streams
+(:mod:`~repro.cluster.arrivals`) feed a discrete-event outer scheduler
+(:mod:`~repro.cluster.scheduler`) whose string-registered policies
+(:mod:`~repro.cluster.policies`) admit jobs onto a node pool and split
+the facility bound among them; every decision lands as a per-job
+``bound_schedule`` so the existing batched backends replay and verify
+the whole stream (:mod:`~repro.cluster.metrics`).
+
+CLI: ``python -m repro.cluster`` (see :mod:`repro.cluster.cli`).
+Guide: ``docs/cluster.md``.
+"""
+
+from .arrivals import (ArrivalError, ArrivalJob, ArrivalTrace,
+                       dump_arrivals, dumps_arrivals, load_arrivals,
+                       loads_arrivals, member_pool, poisson_arrivals)
+from .metrics import (ClusterReport, GridCell, ReplayCheck, policy_grid,
+                      replay, report, suggest_bound)
+from .policies import (CLUSTER_POLICIES, ClusterPolicy, ClusterState,
+                       JobView, get_cluster_policy, marginal_fill,
+                       water_fill)
+from .scheduler import (ClusterResult, ClusterScheduler, JobRun,
+                        RateModel, SchedulerError)
+
+__all__ = [
+    "ArrivalError", "ArrivalJob", "ArrivalTrace", "dump_arrivals",
+    "dumps_arrivals", "load_arrivals", "loads_arrivals", "member_pool",
+    "poisson_arrivals",
+    "CLUSTER_POLICIES", "ClusterPolicy", "ClusterState", "JobView",
+    "get_cluster_policy", "marginal_fill", "water_fill",
+    "ClusterResult", "ClusterScheduler", "JobRun", "RateModel",
+    "SchedulerError",
+    "ClusterReport", "GridCell", "ReplayCheck", "policy_grid",
+    "replay", "report", "suggest_bound",
+]

@@ -1,0 +1,427 @@
+"""Cluster scheduler subsystem (ISSUE 8).
+
+Covers the arrival-trace layer (generation, versioned JSONL round-trip,
+strict-loader rejection), the outer policies (water-fill / marginal
+fill invariants, registry), the discrete-event scheduler (drain,
+ordering, capacity and bound conservation, stall detection), the
+calibrated rate model with its batched replay cross-check (zero event
+fallbacks on the vector executor), the corpus offset-invariance
+acceptance, the CLI, and the benchmark registry satellite.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.cluster import (CLUSTER_POLICIES, ArrivalError, ArrivalJob,
+                           ArrivalTrace, ClusterScheduler, JobView,
+                           RateModel, SchedulerError, dumps_arrivals,
+                           load_arrivals, loads_arrivals, marginal_fill,
+                           member_pool, poisson_arrivals, policy_grid,
+                           replay, report, suggest_bound, water_fill)
+from repro.core.power import (max_useful_cluster_bound,
+                              min_feasible_cluster_bound)
+from repro.core.scenarios import ScenarioFamily
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SAMPLE_CORPUS = ROOT / "examples" / "traces"
+BUNDLED = ROOT / "examples" / "cluster" / "arrivals_1k.jsonl"
+
+ALL_POLICIES = ("fifo-equal-split", "backfill", "power-aware",
+                "fair-share")
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return member_pool("mixed", seed=3)
+
+
+@pytest.fixture(scope="module")
+def trace(pool):
+    return poisson_arrivals(pool, n_jobs=40, rate_hz=0.4, seed=7)
+
+
+@pytest.fixture(scope="module")
+def model(trace):
+    m = RateModel(trace, executor="vector", levels=4)
+    sweep = m.calibrate()
+    assert not sweep.event_fallbacks()
+    return m
+
+
+def run_policy(trace, model, policy, nodes=12, frac=0.5):
+    bound = suggest_bound(trace, total_nodes=nodes, frac=frac)
+    return ClusterScheduler(trace, bound_w=bound, total_nodes=nodes,
+                            policy=policy, model=model).run()
+
+
+# ------------------------------------------------------------ arrivals
+class TestArrivals:
+    def test_roundtrip_identity(self, trace):
+        text = dumps_arrivals(trace)
+        back = loads_arrivals(text)
+        assert back.jobs == trace.jobs
+        assert set(back.members) == set(trace.members)
+        assert back.meta == trace.meta
+        # canonical writer: dump(load(dump)) is byte-stable
+        assert dumps_arrivals(back) == text
+
+    def test_seed_determinism(self, pool):
+        a = poisson_arrivals(pool, n_jobs=30, rate_hz=1.0, seed=5)
+        b = poisson_arrivals(pool, n_jobs=30, rate_hz=1.0, seed=5)
+        c = poisson_arrivals(pool, n_jobs=30, rate_hz=1.0, seed=6)
+        assert a.jobs == b.jobs
+        assert a.jobs != c.jobs
+
+    def test_arrivals_sorted_and_distributed(self, trace):
+        times = [j.t for j in trace.jobs]
+        assert times == sorted(times)
+        assert times[0] == 0.0
+        assert len(trace.users) == 3
+        # every user's mix should actually draw several members
+        by_user = {u: {j.member for j in trace.jobs if j.user == u}
+                   for u in trace.users}
+        assert all(len(ms) >= 2 for ms in by_user.values())
+
+    def test_generator_validation(self, pool):
+        with pytest.raises(ArrivalError):
+            poisson_arrivals(pool, n_jobs=0, rate_hz=1.0)
+        with pytest.raises(ArrivalError):
+            poisson_arrivals(pool, n_jobs=5, rate_hz=0.0)
+        with pytest.raises(ArrivalError):
+            poisson_arrivals(pool, n_jobs=5, rate_hz=1.0, users=())
+
+    def test_bundled_trace_loads(self):
+        trace = load_arrivals(BUNDLED)
+        assert len(trace) == 1000
+        assert len(trace.members) == 6
+        assert trace.meta["generator"] == "poisson"
+
+    def test_member_pool_prefabs_and_corpus(self):
+        assert len(member_pool("mixed", seed=1)) == 6
+        corpus_members = member_pool(str(SAMPLE_CORPUS))
+        assert {m.name for m in corpus_members} == \
+            {"listing2", "npb_is_a4"}
+        with pytest.raises(ArrivalError):
+            member_pool("not-a-pool")
+
+    def test_loader_rejects_bad_traces(self, trace):
+        text = dumps_arrivals(trace)
+        lines = text.splitlines()
+        # no header
+        with pytest.raises(ArrivalError):
+            loads_arrivals("\n".join(lines[1:]))
+        # wrong version / kind
+        hdr = json.loads(lines[0])
+        for patch in ({"version": 99}, {"kind": "mpi-trace"}):
+            bad = dict(hdr, **patch)
+            with pytest.raises(ArrivalError):
+                loads_arrivals("\n".join([json.dumps(bad)] + lines[1:]))
+        # unknown member reference
+        ghost = json.dumps({"record": "job", "name": "zz", "t": 999.0,
+                            "member": "ghost"})
+        with pytest.raises(ArrivalError, match="unknown member"):
+            loads_arrivals(text + ghost + "\n")
+        # duplicate job name
+        dup = json.dumps(dict(record="job", name=trace.jobs[0].name,
+                              t=999.0, member=trace.jobs[0].member))
+        with pytest.raises(ArrivalError, match="duplicate job"):
+            loads_arrivals(text + dup + "\n")
+        # strict rejects out-of-order times; lenient sorts them
+        early = json.dumps({"record": "job", "name": "early", "t": 0.0,
+                            "member": trace.jobs[0].member})
+        with pytest.raises(ArrivalError, match="before"):
+            loads_arrivals(text + early + "\n")
+        lax = loads_arrivals(text + early + "\n", strict=False)
+        assert [j.t for j in lax.jobs] == \
+            sorted(j.t for j in lax.jobs)
+        # unknown record kind / unknown LUT
+        with pytest.raises(ArrivalError, match="unknown record"):
+            loads_arrivals(lines[0] + "\n"
+                           + json.dumps({"record": "frob"}) + "\n")
+        member = json.loads(lines[1])
+        member["cluster"][0]["lut"] = "krypton-9"
+        with pytest.raises(ArrivalError, match="unknown LUT"):
+            loads_arrivals("\n".join([lines[0], json.dumps(member)]))
+
+    def test_trace_invariants(self, pool):
+        with pytest.raises(ArrivalError, match="at least one job"):
+            ArrivalTrace(pool, [])
+        with pytest.raises(ArrivalError, match="negative"):
+            ArrivalJob(name="j", t=-1.0, member=pool[0].name)
+        with pytest.raises(ArrivalError, match="slo"):
+            ArrivalJob(name="j", t=0.0, member=pool[0].name, slo=0.0)
+
+
+# ------------------------------------------------------------ policies
+def views(*boxes):
+    return [JobView(name=f"v{i}", user=u, member=f"m{i}", nodes=2,
+                    min_w=lo, max_w=hi, arrival_t=0.0)
+            for i, (lo, hi, u) in enumerate(boxes)]
+
+
+class TestPolicies:
+    def test_registry(self):
+        for name in ALL_POLICIES:
+            assert name in CLUSTER_POLICIES
+            assert CLUSTER_POLICIES.get(name).name == name
+        with pytest.raises(KeyError, match="no cluster policy"):
+            CLUSTER_POLICIES.get("round-robin-lottery")
+
+    def test_water_fill_floors_caps_and_conserves(self):
+        jobs = views((2.0, 4.0, "a"), (3.0, 20.0, "a"),
+                     (1.0, 2.0, "b"))
+        alloc = water_fill(jobs, 12.0)
+        assert sum(alloc.values()) == pytest.approx(12.0)
+        for j in jobs:
+            assert alloc[j.name] >= j.min_w - 1e-9
+            assert alloc[j.name] <= j.max_w + 1e-9
+        # v0 and v2 cap out; v1 absorbs the rest
+        assert alloc["v0"] == pytest.approx(4.0)
+        assert alloc["v2"] == pytest.approx(2.0)
+        assert alloc["v1"] == pytest.approx(6.0)
+
+    def test_water_fill_equal_when_uncapped(self):
+        jobs = views((1.0, 100.0, "a"), (1.0, 100.0, "a"))
+        alloc = water_fill(jobs, 10.0)
+        assert alloc["v0"] == pytest.approx(alloc["v1"])
+
+    def test_water_fill_infeasible_budget(self):
+        with pytest.raises(ValueError, match="below the running floor"):
+            water_fill(views((5.0, 9.0, "a")), 2.0)
+
+    def test_marginal_fill_follows_weighted_slope(self):
+        jobs = views((1.0, 10.0, "a"), (1.0, 10.0, "a"))
+        jobs[0].rate_fn = lambda w: 0.10 * w   # steep curve
+        jobs[1].rate_fn = lambda w: 0.01 * w   # shallow curve
+        alloc = marginal_fill(jobs, 12.0)
+        assert sum(alloc.values()) == pytest.approx(12.0)
+        assert alloc["v0"] == pytest.approx(10.0)   # steep job capped
+        assert alloc["v1"] == pytest.approx(2.0)
+        # job weight flips the preference
+        jobs[1].weight = 100.0
+        alloc = marginal_fill(jobs, 12.0)
+        assert alloc["v1"] == pytest.approx(10.0)
+
+    def test_fair_share_reclaims_capped_user_surplus(self):
+        policy = CLUSTER_POLICIES.get("fair-share")
+        jobs = views((1.0, 2.0, "a"), (1.0, 50.0, "b"),
+                     (1.0, 50.0, "b"))
+        alloc = policy.split(jobs, 20.0)
+        assert sum(alloc.values()) == pytest.approx(20.0)
+        # user a caps at 2 W; its unused half-share flows to user b
+        assert alloc["v0"] == pytest.approx(2.0)
+        assert alloc["v1"] + alloc["v2"] == pytest.approx(18.0)
+        assert alloc["v1"] == pytest.approx(alloc["v2"])
+
+
+# ----------------------------------------------------------- scheduler
+class TestScheduler:
+    def test_stream_drains_with_sane_times(self, trace, model):
+        result = run_policy(trace, model, "fifo-equal-split")
+        assert len(result.runs) == len(trace.jobs)
+        for run in result.runs:
+            assert run.admit_t >= run.job.t - 1e-9
+            assert run.end_t > run.admit_t
+            assert run.progress == pytest.approx(1.0)
+            assert run.history[0][0] == run.admit_t
+        assert result.makespan >= trace.duration
+
+    def test_fifo_admits_in_arrival_order(self, trace, model):
+        result = run_policy(trace, model, "fifo-equal-split")
+        admits = [r.admit_t for r in result.runs]  # arrival order
+        assert admits == sorted(admits)
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_capacity_and_bound_conserved(self, trace, model, policy):
+        nodes = 12
+        result = run_policy(trace, model, policy, nodes=nodes)
+        bound = result.bound_w
+        for t, used in result.util:
+            assert used <= bound + 1e-6
+        # node demand and per-job watt boxes at every event instant
+        events = sorted({t for r in result.runs
+                         for t, _ in r.history})
+        for t in events:
+            live = [r for r in result.runs
+                    if r.admit_t <= t < r.end_t - 1e-12]
+            assert sum(len(r.member.graph.nodes) for r in live) \
+                <= nodes
+            total = 0.0
+            for r in live:
+                w = [hw for ht, hw in r.history if ht <= t][-1]
+                assert r.min_w - 1e-6 <= w <= r.max_w + 1e-6
+                total += w
+            assert total <= bound + 1e-6
+
+    def test_power_aware_beats_fifo_on_makespan(self, trace, model):
+        fifo = report(run_policy(trace, model, "fifo-equal-split"))
+        aware = report(run_policy(trace, model, "power-aware"))
+        assert aware.makespan < fifo.makespan
+
+    def test_rejects_impossible_streams(self, trace, model):
+        with pytest.raises(SchedulerError, match="nodes"):
+            ClusterScheduler(trace, bound_w=100.0, total_nodes=2,
+                             policy="fifo-equal-split", model=model)
+        with pytest.raises(SchedulerError, match="bound"):
+            ClusterScheduler(trace, bound_w=1.0, total_nodes=12,
+                             policy="fifo-equal-split", model=model)
+
+    def test_rate_model_interpolates_monotonically(self, trace, model):
+        for m in trace.members.values():
+            lo = min_feasible_cluster_bound(m.specs)
+            hi = max_useful_cluster_bound(m.specs)
+            rates = [model.rate(m.name, lo + f * (hi - lo))
+                     for f in (0.0, 0.25, 0.5, 0.75, 1.0)]
+            assert all(r > 0 for r in rates)
+            assert rates == sorted(rates)  # more watts, faster
+            assert model.best_makespan(m.name) == \
+                pytest.approx(1.0 / rates[-1])
+
+
+# -------------------------------------------------- replay cross-check
+class TestReplay:
+    def test_replay_clean_and_model_close(self, trace, model):
+        result = run_policy(trace, model, "power-aware")
+        check = replay(result, executor="vector")
+        assert check.event_fallbacks == 0
+        assert check.max_rel_err < 0.25
+        assert check.mean_rel_err < 0.10
+
+    def test_scenarios_carry_job_relative_schedules(self, trace,
+                                                    model):
+        result = run_policy(trace, model, "fair-share")
+        cells = result.scenarios()
+        assert len(cells) == len(trace.jobs)
+        for cell, run in zip(cells, result.runs):
+            assert cell.bound_w == run.history[0][1]
+            if cell.bound_schedule:
+                times = [t for t, _ in cell.bound_schedule]
+                assert times[0] > 0
+                assert times == sorted(times)
+
+    def test_report_metrics_consistent(self, trace, model):
+        result = run_policy(trace, model, "backfill")
+        rep = report(result)
+        assert rep.throughput == pytest.approx(
+            rep.n_jobs / rep.makespan)
+        assert 0.0 <= rep.slo_attainment <= 1.0
+        assert 0.0 < rep.util_mean <= 1.0 + 1e-9
+        assert rep.wait_p99 >= rep.wait_mean >= 0.0
+
+    def test_policy_grid_shares_model(self, trace, model):
+        cells = policy_grid(trace, bound_w=suggest_bound(trace, 12),
+                            total_nodes=12,
+                            policies=("fifo-equal-split", "backfill"),
+                            model=model, replay=False)
+        assert [c.report.policy for c in cells] == \
+            ["fifo-equal-split", "backfill"]
+        assert all(c.check is None for c in cells)
+
+
+# --------------------------------------- corpus offset invariance (S3)
+class TestCorpusOffsetInvariance:
+    def test_member_makespans_invariant_to_arrival_offset(self):
+        members = ScenarioFamily.from_corpus(SAMPLE_CORPUS).members
+        baseline = {}
+        model = None
+        for offset in (0.0, 2.5, 40.0):
+            jobs = [ArrivalJob(name=f"{m.name}-j", t=offset,
+                               member=m.name) for m in members]
+            jobs.sort(key=lambda j: j.t)
+            trace = ArrivalTrace(members, jobs)
+            if model is None:
+                model = RateModel(trace, executor="vector", levels=3)
+                assert not model.calibrate().event_fallbacks()
+            else:  # same members: reuse curves, skip recalibration
+                model.trace = trace
+            nodes = sum(len(m.graph.nodes) for m in members)
+            bound = sum(max_useful_cluster_bound(m.specs)
+                        for m in members)
+            result = ClusterScheduler(
+                trace, bound_w=bound, total_nodes=nodes,
+                policy="backfill", model=model).run()
+            check = replay(result, executor="vector")
+            assert check.event_fallbacks == 0
+            for run, rec in zip(result.runs, check.sweep):
+                # admission is immediate and the bound uncontended,
+                # so the inner makespan cannot depend on the offset
+                assert run.admit_t == pytest.approx(offset)
+                name = run.member.name
+                if name in baseline:
+                    assert rec.result.makespan == baseline[name], \
+                        f"{name} makespan changed at offset {offset}"
+                else:
+                    baseline[name] = rec.result.makespan
+        assert set(baseline) == {m.name for m in members}
+
+
+# ------------------------------------------------------------------ CLI
+class TestCli:
+    def test_generate_then_run_clean(self, tmp_path, capsys):
+        from repro.cluster.cli import main
+
+        out = tmp_path / "arrivals.jsonl"
+        rc = main(["generate", "--pool", "mixed", "--jobs", "12",
+                   "--rate-hz", "0.3", "--seed", "7", "--users", "2",
+                   "--out", str(out)])
+        assert rc == 0 and out.exists()
+        payload = tmp_path / "report.json"
+        rc = main(["run", str(out), "--nodes", "10", "--bound-frac",
+                   "0.6", "--executor", "vector", "--levels", "3",
+                   "--policies", "fifo-equal-split,backfill,power-aware",
+                   "--expect-clean", "--json", str(payload)])
+        captured = capsys.readouterr().out
+        assert rc == 0, captured
+        assert "clean: zero event fallbacks" in captured
+        data = json.loads(payload.read_text())
+        assert len(data["policies"]) == 3
+        for entry in data["policies"]:
+            assert entry["makespan"] > 0
+            assert entry["throughput"] > 0
+            assert entry["wait_p99"] >= 0
+            assert entry["replay"]["event_fallbacks"] == 0
+
+    def test_run_rejects_unknown_policy(self, tmp_path):
+        from repro.cluster.cli import main
+
+        out = tmp_path / "arrivals.jsonl"
+        main(["generate", "--pool", "mixed", "--jobs", "3",
+              "--rate-hz", "1.0", "--out", str(out)])
+        with pytest.raises(KeyError, match="no cluster policy"):
+            main(["run", str(out), "--nodes", "10", "--levels", "2",
+                  "--policies", "slurm"])
+
+
+# ------------------------------------- benchmark registry satellite (S1)
+class TestBenchRegistry:
+    def _run(self, *argv):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+            + env.get("PYTHONPATH", "")
+        return subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", *argv],
+            capture_output=True, text=True, cwd=ROOT, env=env,
+            timeout=120)
+
+    def test_list_names_every_bench_with_description(self):
+        proc = self._run("--list")
+        assert proc.returncode == 0, proc.stderr
+        lines = [ln for ln in proc.stdout.splitlines() if ln.strip()]
+        names = {ln.split()[0] for ln in lines}
+        assert "cluster" in names
+        for expected in ("fig8", "family", "serve", "trace-replay",
+                         "sharded"):
+            assert expected in names
+        assert all(len(ln.split(None, 1)) == 2 for ln in lines)
+
+    def test_unknown_bench_fails_with_available_set(self):
+        proc = self._run("--only", "warp-drive")
+        assert proc.returncode != 0
+        err = proc.stderr
+        assert "warp-drive" in err
+        assert "available" in err and "cluster" in err

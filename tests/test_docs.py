@@ -18,6 +18,10 @@ import re
 
 import pytest
 
+import repro.cluster.arrivals
+import repro.cluster.metrics
+import repro.cluster.policies
+import repro.cluster.scheduler
 import repro.core.batchsim
 import repro.core.scenarios
 import repro.core.sweep
@@ -27,7 +31,9 @@ DOCS = ROOT / "docs"
 FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
 
 DOCTEST_MODULES = [repro.core.sweep, repro.core.batchsim,
-                   repro.core.scenarios]
+                   repro.core.scenarios, repro.cluster.arrivals,
+                   repro.cluster.policies, repro.cluster.scheduler,
+                   repro.cluster.metrics]
 
 
 @pytest.mark.parametrize("mod", DOCTEST_MODULES,
@@ -87,7 +93,11 @@ def _public_members(mod):
 
 
 @pytest.mark.parametrize("mod", [repro.core.sweep, repro.core.batchsim,
-                                 repro.core.scenarios],
+                                 repro.core.scenarios,
+                                 repro.cluster.arrivals,
+                                 repro.cluster.policies,
+                                 repro.cluster.scheduler,
+                                 repro.cluster.metrics],
                          ids=lambda m: m.__name__)
 def test_public_api_has_docstrings(mod):
     """pydocstyle-lite: the bucket planner / mask conventions must stay

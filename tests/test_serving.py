@@ -344,3 +344,63 @@ class TestJaxService:
             assert rec.ok
             assert rec.result.makespan == pytest.approx(
                 off.result.makespan, abs=1e-6)
+
+
+# ----------------------------------------------- schedule padding (S2)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # tier-1 runs without the dev extra
+    from _hyp_stub import given, settings, st
+
+
+class TestSchedulePadding:
+    """The service pads ``bound_schedule`` columns up to a power of two
+    (``_service_key``) with inert events; results must be identical to
+    the offline engine running the exact, unpadded schedule — for
+    length 1, pow2 lengths, and pow2±1 lengths."""
+
+    def cell(self, schedule):
+        return Scenario(name=f"sched{len(schedule)}",
+                        graph=listing2_graph(),
+                        specs=tuple(homogeneous_cluster(3)),
+                        bound_w=9.0, policy="equal-share",
+                        bound_schedule=tuple(schedule))
+
+    def check_identical(self, schedule):
+        from repro.core import SweepEngine
+
+        s = self.cell(schedule)
+        offline = SweepEngine(executor="vector").run([s]).records[0]
+        assert offline.ok and offline.backend == "vector"
+        with svc() as service:
+            served = service.submit(s).result(timeout=60)
+        assert served.ok and served.backend == "vector"
+        assert served.result.makespan == offline.result.makespan
+        assert served.result.energy_j == offline.result.energy_j
+        return offline.result
+
+    @pytest.mark.parametrize("length", [1, 2, 3, 4, 5, 7, 8, 9])
+    def test_non_pow2_lengths_result_identical(self, length):
+        # events inside the run (the listing-2 makespan at 9 W is tens
+        # of seconds) and beyond it, watts bouncing across the range
+        schedule = [(1.0 + 4.0 * k, 4.0 + 5.0 * (k % 3))
+                    for k in range(length)]
+        result = self.check_identical(schedule)
+        assert result.makespan > 0
+
+    def test_padded_lengths_change_nothing_vs_each_other(self):
+        # same effective schedule, one padded to 2 cols, one to 4:
+        # trailing far-future events are inert by construction
+        base = [(2.0, 4.0)]
+        far = [(1e8, 4.0), (2e8, 4.0)]
+        a = self.check_identical(base)
+        b = self.check_identical(base + far)
+        assert a.makespan == b.makespan
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.floats(min_value=3.5, max_value=12.0),
+                    min_size=1, max_size=9))
+    def test_fuzzed_schedules_result_identical(self, watts):
+        schedule = [(1.0 + 3.0 * k, w) for k, w in enumerate(watts)]
+        self.check_identical(schedule)
