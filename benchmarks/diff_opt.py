@@ -1,0 +1,146 @@
+"""Differentiable-layer benchmark (ISSUE 9): gradient vs the paper ILP,
+and the gradient-trained cap policy out of distribution.
+
+Part 1 gradient-descends static per-node caps on the Listing-2 graph
+(:func:`repro.diff.optimize.optimize_static_caps`) and scores them
+against the paper ILP assignment in the *same* smooth-LUT vector
+simulator — a gap above +2% of the ILP makespan at any bound is a hard
+failure (the acceptance threshold; negative gaps mean the continuous
+optimum beat the state-quantized ILP, which it legitimately can).
+
+Part 2 streams a held-out scenario family (seed 77 — disjoint from the
+checkpoint's training seeds) through the SweepService in two waves and
+reports the learned policy's makespan ratios vs ``equal-share`` and
+``heuristic``.  Any event fallback, any recompile, and any compile
+after the first wave are hard failures: the learned policy must be a
+first-class jittable citizen, not a fallback passenger.
+
+Deposits ``BENCH_RECORDS["diff"]`` (written to ``BENCH_diff.json`` in
+CI).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from .common import BENCH_RECORDS, csv_line
+
+BOUNDS = (7.0, 9.0, 12.0)
+ILP_GAP_MAX = 0.02
+
+
+def _optimize_part(quick: bool) -> dict:
+    from repro.core import (homogeneous_cluster, listing2_graph,
+                            simulate_batch)
+    from repro.diff import evaluate_static_caps, optimize_static_caps
+
+    g, specs = listing2_graph(), homogeneous_cluster(3)
+    steps = 150 if quick else 300
+    gaps = {}
+    t0 = time.perf_counter()
+    for bound in BOUNDS:
+        ilp = simulate_batch(g, specs, [bound], "ilp",
+                             smooth_lut=True)[0].makespan
+        opt = optimize_static_caps(g, specs, bound, steps=steps)
+        stepped = evaluate_static_caps(opt.caps, g, specs, bound,
+                                       smooth_lut=False)
+        gap = (opt.exact_makespan - ilp) / ilp
+        gaps[bound] = {"ilp_makespan": ilp,
+                       "grad_makespan": opt.exact_makespan,
+                       "grad_makespan_stepped": stepped,
+                       "gap": gap}
+        print(f"  P={bound:5.1f}W  ilp {ilp:7.3f}s  "
+              f"grad {opt.exact_makespan:7.3f}s  "
+              f"(stepped {stepped:7.3f}s)  gap {gap:+.2%}")
+        if gap > ILP_GAP_MAX:
+            raise RuntimeError(
+                f"grad-optimized caps {gap:+.2%} worse than the ILP at "
+                f"{bound}W (limit {ILP_GAP_MAX:+.0%})")
+    return {"steps": steps, "bounds": dict(gaps),
+            "opt_s": time.perf_counter() - t0}
+
+
+def _ood_part(quick: bool, executor: str) -> dict:
+    from repro.core.scenarios import random_layered_family
+    from repro.serving import SweepService
+
+    n_members = 4 if quick else 8
+    policies = ("equal-share", "heuristic", "learned")
+    waves = [random_layered_family(seed=77, n_members=n_members,
+                                   policies=policies,
+                                   bound_fracs=fracs).scenarios()
+             for fracs in ((0.3, 0.5), (0.35, 0.55))]
+
+    t0 = time.perf_counter()
+    with SweepService(executor=executor, flush_deadline_s=0.05,
+                      bucket_rows=8) as service:
+        wave1 = [t.result(600) for t in service.submit_many(waves[0])]
+        service.drain(timeout=300)
+        warm = len(service.profile.buckets) if executor == "jax" else 0
+        wave2 = [t.result(600) for t in service.submit_many(waves[1])]
+        profile = service.profile if executor == "jax" else None
+    sweep_s = time.perf_counter() - t0
+
+    records = list(zip(waves[0] + waves[1], wave1 + wave2))
+    bad = [r for _, r in records if not r.ok]
+    if bad:
+        raise RuntimeError(f"{len(bad)} failed scenarios: "
+                           f"{bad[0].error}")
+    fallbacks = sum(1 for _, r in records if r.backend == "event")
+    if fallbacks:
+        raise RuntimeError(f"{fallbacks} event fallbacks — the learned "
+                           f"policy must dispatch on the batch backend")
+    if profile is not None:
+        if profile.recompiles:
+            raise RuntimeError(f"{profile.recompiles} recompiles")
+        late = profile.compiles_after(warm)
+        if late:
+            raise RuntimeError(f"{late} compiles after the warm-up wave")
+
+    cells = {}
+    for s, rec in records:
+        cells.setdefault((s.name, round(s.bound_w, 6)), {})[s.policy] \
+            = rec.result.makespan
+    vs_eq, vs_heu = [], []
+    for ms in cells.values():
+        if len(ms) == len(policies):
+            vs_eq.append(ms["learned"] / ms["equal-share"])
+            vs_heu.append(ms["learned"] / ms["heuristic"])
+    mean = lambda xs: sum(xs) / len(xs)  # noqa: E731
+    print(f"  {len(cells)} held-out cells on executor={executor}: "
+          f"learned/equal-share mean {mean(vs_eq):.4f} "
+          f"(worst {max(vs_eq):.4f}), learned/heuristic mean "
+          f"{mean(vs_heu):.4f} (worst {max(vs_heu):.4f})")
+    return {"executor": executor, "cells": len(cells),
+            "learned_vs_equal_share_mean": mean(vs_eq),
+            "learned_vs_equal_share_worst": max(vs_eq),
+            "learned_vs_heuristic_mean": mean(vs_heu),
+            "learned_vs_heuristic_worst": max(vs_heu),
+            "event_fallbacks": fallbacks,
+            "recompiles": 0 if profile is not None else None,
+            "sweep_s": sweep_s}
+
+
+def main(quick: bool = True, backend: str = "jax") -> List[str]:
+    try:
+        import jax  # noqa: F401 — availability probe
+    except ImportError:
+        print("jax not installed; skipping the differentiable-layer "
+              "benchmark (optimizer needs jax.grad)")
+        return []
+
+    executor = "jax" if backend == "jax" else "vector"
+    print("gradient-optimized static caps vs paper ILP (listing2, "
+          "smooth-LUT evaluation):")
+    opt = _optimize_part(quick)
+    print("held-out family (seed 77), gradient-trained policy:")
+    ood = _ood_part(quick, executor)
+
+    BENCH_RECORDS["diff"] = {"optimize": opt, "ood": ood}
+    worst_gap = max(v["gap"] for v in opt["bounds"].values())
+    return [csv_line("diff_opt", 1e6 * opt["opt_s"] / opt["steps"]
+                     / len(BOUNDS),
+                     f"worst_ilp_gap={worst_gap:+.2%} "
+                     f"learned/heuristic="
+                     f"{ood['learned_vs_heuristic_mean']:.4f}")]

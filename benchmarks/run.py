@@ -39,6 +39,8 @@ BENCHES = {
                      "training-step graphs"),
     "roofline": ("roofline_report", "§Roofline table: kernel arithmetic "
                  "intensity"),
+    "diff": ("diff_opt", "gradient-optimized caps vs paper ILP + "
+             "learned-policy OOD sweep (needs jax)"),
 }
 
 

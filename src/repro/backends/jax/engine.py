@@ -88,7 +88,8 @@ from repro.kernels.power_step import (BIG_TIME, StepTables,
                                       default_interpret, power_step,
                                       step_tables)
 
-from .policy_fns import JaxPolicy, _JAX_REGISTRY, get_jax_policy
+from .policy_fns import (JaxPolicy, _JAX_REGISTRY, current_jobs,
+                         get_jax_policy)
 from .profile import BucketProfile
 
 #: Anything above this is "no event" (see power_step's BIG_TIME).
@@ -148,9 +149,9 @@ class _RowState(NamedTuple):
 
 
 def _cur(ctx: _Ctx, st: _RowState) -> jnp.ndarray:
-    """Each lane's current job slot (sentinel J when exhausted)."""
-    n = ctx.node_seq.shape[0]
-    return ctx.node_seq[jnp.arange(n), st.ptr]
+    """Each lane's current job slot — shared with the policy layer
+    (:func:`repro.backends.jax.policy_fns.current_jobs`)."""
+    return current_jobs(ctx, st)
 
 
 def _ready_mask(ctx: _Ctx, st: _RowState) -> jnp.ndarray:

@@ -37,6 +37,16 @@ from repro.policies.registry import PolicyRegistry
 from repro.policies.vector import resolve_assignments
 
 
+def current_jobs(ctx, st) -> jnp.ndarray:
+    """Each lane's current job slot (sentinel ``J`` when exhausted).
+
+    The one gather every job-indexed policy needs (ILP per-job caps,
+    the learned policy's per-job ``cpu_frac`` feature) and the engine's
+    own physics; shared here so the slot convention cannot drift."""
+    n = ctx.node_seq.shape[0]
+    return ctx.node_seq[jnp.arange(n), st.ptr]
+
+
 def _nominal(ctx, st) -> jnp.ndarray:
     """The paper's P/n share as a lane vector.
 
@@ -199,6 +209,51 @@ class JaxOracle(JaxPolicy):
 
     name = "oracle"
     redistribute = True
+
+
+@register_jax_policy("learned")
+class JaxLearned(JaxPolicy):
+    """Gradient-trained MLP cap split, compiled.
+
+    The math is the shared xp-generic core in
+    :mod:`repro.policies.learned` called with ``jax.numpy`` — the same
+    functions the event/vector adapters run with numpy and
+    :mod:`repro.diff.train` differentiates through, so the trained
+    parameters mean the same thing in every backend.  Checkpoint weights
+    are tiled across the row axis in ``init_state`` (every leaf carries
+    the batch dimension the sharded executor partitions); the per-row
+    ``caps_fn`` sees the plain ``(F, H)`` matrices after vmap strips it.
+    ``exact=False``: the engine evaluates the MLP in float32, and near
+    an LUT state-power threshold that rounding can flip the selected
+    operating point versus the float64 vector adapter.
+    """
+
+    name = "learned"
+    exact = False
+
+    def __init__(self, checkpoint: Optional[str] = None):
+        from repro.policies.learned import load_checkpoint
+
+        self.params = load_checkpoint(checkpoint)
+
+    def init_state(self, sim) -> Dict[str, np.ndarray]:
+        b = sim.n_rows
+        return {f"mlp_{k}": np.repeat(np.asarray(v)[None], b, axis=0)
+                for k, v in self.params.items()}
+
+    @staticmethod
+    def caps_fn(ctx, st, pol) -> jnp.ndarray:
+        from repro.policies.learned import compute_caps
+
+        params = {k[4:]: v for k, v in pol.items()
+                  if k.startswith("mlp_")}
+        rho = ctx.rho_pad[current_jobs(ctx, st)]
+        return compute_caps(
+            jnp, params, running=st.running,
+            rho=jnp.where(st.running, rho, 0.0),
+            bound=st.bound * 1.0, n_active=ctx.n_active * 1.0,
+            p_max=ctx.tab.p_max[0], cap_floor=ctx.tab.cap_floor[0],
+            idle_w=ctx.tab.idle_w[0])
 
 
 @register_jax_policy("heuristic")

@@ -87,6 +87,28 @@ _DONE_EPS = 1e-9
 BIG_EVENT_TIME = 1e30
 
 
+class WaveCandidates(NamedTuple):
+    """One wave's candidate next-event times, measured from the rows'
+    current instants (:meth:`BatchSimulator.wave_candidates`).
+
+    This is THE event-selection seam of the wave loop: the advance is
+    ``min(t_comp, t_tick, t_bound)`` per row, a hard minimum whose
+    winner reorders discontinuously under cap perturbations.  The
+    differentiable relaxation (:mod:`repro.diff`) replaces exactly this
+    reduction with a temperature-annealed soft minimum; exposing the
+    candidates as data keeps the two layers pinned to the same event
+    vocabulary.
+    """
+
+    t_fin: np.ndarray         # (B, N) per-lane completion times (inf idle)
+    t_comp: np.ndarray        # (B,) earliest completion per row
+    t_tick: np.ndarray        # (B,) time to the next policy tick (inf)
+    next_tick: np.ndarray     # (B,) absolute next tick boundary
+    t_bound: np.ndarray       # (B,) time to the next bound arrival (inf)
+    next_bound_t: np.ndarray  # (B,) absolute next arrival time
+    sched_live: np.ndarray    # (B,) row still has scheduled arrivals
+
+
 class GraphArrays(NamedTuple):
     """Static (graph, cluster) geometry shared by the batch backends.
 
@@ -374,6 +396,7 @@ class BatchSimulator:
                  trace_every: Optional[float] = None,
                  max_steps: int = 1_000_000,
                  bound_schedules: Optional[Sequence] = None,
+                 smooth_lut: bool = False,
                  **policy_kwargs):
         graph.topological_order()          # validates the DAG
         self.graph = graph
@@ -383,7 +406,7 @@ class BatchSimulator:
         self.specs = list(specs)
         b = self._setup_run_params(bounds, policy, dt, latency_s,
                                    trace_every, max_steps, policy_kwargs,
-                                   bound_schedules)
+                                   bound_schedules, smooth_lut)
 
         # ---- static graph arrays, broadcast (zero-copy) over the rows
         arrays = build_graph_arrays(graph, self.specs)
@@ -413,6 +436,7 @@ class BatchSimulator:
                max_steps: int = 1_000_000,
                bound_schedules: Optional[Sequence] = None,
                pad_dims: Optional[Tuple[int, int, int, int, int]] = None,
+               smooth_lut: bool = False,
                **policy_kwargs) -> "BatchSimulator":
         """Build a mixed-shape batch: row ``b`` runs ``items[b]`` under
         ``bounds[b]`` (one (graph, specs) pair and one bound per row).
@@ -428,7 +452,8 @@ class BatchSimulator:
         self.specs = None
         self.job_ids = None
         self._setup_run_params(bounds, policy, dt, latency_s, trace_every,
-                               max_steps, policy_kwargs, bound_schedules)
+                               max_steps, policy_kwargs, bound_schedules,
+                               smooth_lut)
         arrays = stack_graph_arrays(items, pad_dims)
         self.arrays = arrays
         self._init_geometry(
@@ -442,9 +467,17 @@ class BatchSimulator:
 
     # ------------------------------------------------------- construction
     def _setup_run_params(self, bounds, policy, dt, latency_s, trace_every,
-                          max_steps, policy_kwargs, bound_schedules) -> int:
+                          max_steps, policy_kwargs, bound_schedules,
+                          smooth_lut: bool = False) -> int:
         if dt <= 0:
             raise ValueError("dt must be positive")
+        #: ``True`` routes the per-wave LUT translation through the
+        #: piecewise-linear relaxation (``smooth=True`` of
+        #: :func:`~repro.core.power.batched_operating_point`) — the
+        #: exact-trajectory oracle the differentiable layer's
+        #: ``soft_makespan`` converges to as temperature -> 0.  The
+        #: default is the paper's stepped translator, unchanged.
+        self.smooth_lut = bool(smooth_lut)
         self._bounds0 = np.asarray(list(bounds), dtype=float)
         if self._bounds0.ndim != 1 or len(self._bounds0) == 0:
             raise ValueError("bounds must be a non-empty 1-D sequence")
@@ -562,6 +595,46 @@ class BatchSimulator:
             self.row_done |= newly_done
             self.makespan[newly_done] = self.row_t[newly_done]
 
+    def wave_candidates(self, rate: np.ndarray,
+                        tick_count: Optional[np.ndarray] = None,
+                        sched_idx: Optional[np.ndarray] = None
+                        ) -> WaveCandidates:
+        """The wave loop's candidate next-event times as data.
+
+        ``rate`` is the ``(B, N)`` per-lane progress rate of the current
+        segment; ``tick_count`` the per-row tick counters (``None`` for
+        policies without ticks); ``sched_idx`` the per-row next
+        bound-schedule cursor (``None`` without schedules).  Returns the
+        :class:`WaveCandidates` the advance minimizes over — the event
+        vocabulary :mod:`repro.diff` relaxes (see that class's doc).
+        """
+        b = self.n_rows
+        with np.errstate(divide="ignore", invalid="ignore"):
+            t_fin = np.where(rate > 0, self.remaining / rate, np.inf)
+        t_comp = t_fin.min(axis=1)
+        if tick_count is not None:
+            next_tick = (tick_count + 1) * self.dt
+            t_tick = next_tick - self.row_t
+        else:
+            next_tick = np.full(b, np.inf)
+            t_tick = np.full(b, np.inf)
+        if sched_idx is not None and self._sched is not None:
+            sched_t, _ = self._sched
+            t_cols = sched_t.shape[1]
+            idx_c = np.minimum(sched_idx, t_cols - 1)
+            next_bound_t = sched_t[self._bidx, idx_c]
+            sched_live = sched_idx < t_cols
+            t_bound = np.where(sched_live, next_bound_t - self.row_t,
+                               np.inf)
+        else:
+            next_bound_t = np.full(b, np.inf)
+            sched_live = np.zeros(b, dtype=bool)
+            t_bound = np.full(b, np.inf)
+        return WaveCandidates(t_fin=t_fin, t_comp=t_comp, t_tick=t_tick,
+                              next_tick=next_tick, t_bound=t_bound,
+                              next_bound_t=next_bound_t,
+                              sched_live=sched_live)
+
     def _record_trace(self, p_cluster: np.ndarray) -> None:
         every = self._trace_every
         for b in range(self.n_rows):
@@ -617,8 +690,8 @@ class BatchSimulator:
             if steps > self.max_steps:
                 raise RuntimeError(f"batch simulator exceeded max steps "
                                    f"({self.max_steps}); livelock?")
-            freq, duty, op_power = batched_operating_point(self.table,
-                                                           self.cap)
+            freq, duty, op_power = batched_operating_point(
+                self.table, self.cap, smooth=self.smooth_lut)
             rho = self.rho_pad[self._bidx[:, None], self._cur()]
             rate = np.where(self.running,
                             batched_rates(self.table, freq, duty, rho), 0.0)
@@ -628,20 +701,15 @@ class BatchSimulator:
             if self._trace_every is not None:
                 self._record_trace(p_cluster)
 
-            with np.errstate(divide="ignore", invalid="ignore"):
-                t_fin = np.where(rate > 0, self.remaining / rate, np.inf)
-            t_comp = t_fin.min(axis=1)
-            next_tick = (tick_count + 1) * self.dt if ticks \
-                else np.full(b, np.inf)
-            t_tick = next_tick - self.row_t
+            cand = self.wave_candidates(
+                rate,
+                tick_count=tick_count if ticks else None,
+                sched_idx=sched_idx if self._sched is not None else None)
+            t_comp, t_tick, t_bound = cand.t_comp, cand.t_tick, cand.t_bound
+            next_tick, next_bound_t = cand.next_tick, cand.next_bound_t
+            sched_live = cand.sched_live
             if self._sched is not None:
                 idx_c = np.minimum(sched_idx, t_cols - 1)
-                next_bound_t = sched_t[self._bidx, idx_c]
-                sched_live = sched_idx < t_cols
-                t_bound = np.where(sched_live,
-                                   next_bound_t - self.row_t, np.inf)
-            else:
-                t_bound = np.full(b, np.inf)
             step = np.minimum(np.minimum(t_comp, t_tick), t_bound)
             # Deadlock is judged on t_comp, not step: starts depend only
             # on dependency completions, so a row with no running lane
@@ -727,9 +795,11 @@ def simulate_batch(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
                    dt: float = 0.05, latency_s: float = 0.05,
                    trace_every: Optional[float] = None,
                    bound_schedules: Optional[Sequence] = None,
+                   smooth_lut: bool = False,
                    **policy_kwargs) -> List[SimResult]:
     """One-call facade: one :class:`SimResult` per entry of ``bounds``."""
     return BatchSimulator(graph, specs, bounds, policy=policy, dt=dt,
                           latency_s=latency_s, trace_every=trace_every,
                           bound_schedules=bound_schedules,
+                          smooth_lut=smooth_lut,
                           **policy_kwargs).run()

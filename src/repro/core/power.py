@@ -283,7 +283,8 @@ def lut_table(specs: Sequence[NodeSpec]) -> LUTTable:
         cap_floor=np.array([cap_floor_w(s.lut) for s in specs]))
 
 
-def batched_operating_point(table: LUTTable, caps_w: np.ndarray
+def batched_operating_point(table: LUTTable, caps_w: np.ndarray,
+                            smooth: bool = False
                             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized :func:`operating_point`: caps ``(B, N)`` -> (freq, duty,
     power), each ``(B, N)``.  Elementwise-identical to the scalar
@@ -293,7 +294,21 @@ def batched_operating_point(table: LUTTable, caps_w: np.ndarray
     :func:`lut_table` layout, shared by every batch row) or one cluster
     *per row* (``(B, N, S)`` tables from :func:`stack_lut_tables`, the
     padded-bucket layout); both broadcast against the ``(B, N)`` caps.
+
+    ``smooth=True`` selects the piecewise-linear relaxation of the
+    translator used by the differentiable layer (:mod:`repro.diff`): the
+    hard highest-fitting-state gather is a step function of the cap
+    (zero gradient almost everywhere, undefined at state powers), so the
+    smooth path instead interpolates frequency linearly between adjacent
+    LUT states and draws ``clip(cap, duty-floor draw, p_max)`` — a
+    continuous, almost-everywhere-differentiable cap->operating-point
+    map that agrees with the hard translator exactly *at* the LUT state
+    powers and at/below the duty region.  Above ``p_max`` the point
+    clamps to the top state (gradients vanish there by design).  The
+    default ``smooth=False`` path is unchanged, bit for bit.
     """
+    if smooth:
+        return _smooth_operating_point(table, caps_w)
     fits = table.state_p <= caps_w[..., None] + 1e-12
     idx = fits.sum(axis=-1) - 1            # highest fitting state, -1 if none
     has_state = idx >= 0
@@ -309,6 +324,49 @@ def batched_operating_point(table: LUTTable, caps_w: np.ndarray
                                                          caps_w.shape))
     duty = np.where(has_state, 1.0, q)
     power = np.where(has_state, power_fit, table.idle_w + q * table.span)
+    return freq, duty, power
+
+
+def _smooth_operating_point(table: LUTTable, caps_w: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The ``smooth=True`` branch of :func:`batched_operating_point`.
+
+    Written with the same gather/compare/where vocabulary as the hard
+    path so :mod:`repro.diff.relax` can mirror it in ``jnp`` verbatim
+    (the jax mirror is parity-tested against this reference).  The
+    segment *index* still comes from a hard gather — gradients flow
+    through the interpolated values, not the index, which is exactly
+    right for a piecewise-linear function.
+    """
+    fits = table.state_p <= caps_w[..., None] + 1e-12
+    idx = fits.sum(axis=-1) - 1            # segment lower knot, -1 if none
+    has_state = idx >= 0
+    idx_c = np.maximum(idx, 0)[..., None]
+    shape = caps_w.shape + (table.state_p.shape[-1],)
+    sp = np.broadcast_to(table.state_p, shape)
+    sf = np.broadcast_to(table.state_f, shape)
+    p_lo = np.take_along_axis(sp, idx_c, -1)[..., 0]
+    f_lo = np.take_along_axis(sf, idx_c, -1)[..., 0]
+    idx_n = np.minimum(idx_c + 1, shape[-1] - 1)
+    p_hi = np.take_along_axis(sp, idx_n, -1)[..., 0]
+    f_hi = np.take_along_axis(sf, idx_n, -1)[..., 0]
+    # Segment fraction: +inf-padded upper knots (and the top state, whose
+    # "next" slot is itself) give t = 0, i.e. a flat clamp at the edge.
+    denom = p_hi - p_lo
+    with np.errstate(invalid="ignore", divide="ignore"):
+        t = np.where(denom > 0, (caps_w - p_lo) / denom, 0.0)
+    t = np.clip(np.where(np.isfinite(t), t, 0.0), 0.0, 1.0)
+    freq_fit = f_lo + t * (f_hi - f_lo)
+    q = (caps_w - table.idle_w) / table.span
+    q = np.clip(q, DUTY_FLOOR, 1.0)
+    freq = np.where(has_state, freq_fit, np.broadcast_to(table.f_min,
+                                                         caps_w.shape))
+    duty = np.where(has_state, 1.0, q)
+    floor_draw = table.idle_w + q * table.span
+    power = np.where(has_state,
+                     np.minimum(caps_w, np.broadcast_to(table.p_max,
+                                                        caps_w.shape)),
+                     floor_draw)
     return freq, duty, power
 
 

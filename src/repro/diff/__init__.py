@@ -1,0 +1,60 @@
+"""Differentiable power-redistribution simulator (guarded: importable
+without jax).
+
+A smoothed relaxation of the batched wave simulator
+(:mod:`repro.core.batchsim`) built from two substitutions:
+
+* the hard ``min`` over the wave's candidate event times
+  (:class:`~repro.core.batchsim.WaveCandidates`) becomes a
+  temperature-annealed Boltzmann soft minimum (:mod:`repro.diff.relax`);
+* the stepped power->frequency LUT translation becomes the
+  piecewise-linear interpolation that ``smooth=True`` selects in
+  :func:`repro.core.power.batched_operating_point`.
+
+``soft_makespan`` is then ``jax.grad``/``jit``/``vmap``-compatible and
+converges to the exact ``BatchSimulator(smooth_lut=True)`` makespan as
+the temperature goes to zero (tests/test_diff_grad.py pins both the
+gradients, against central finite differences, and the convergence).
+On top of it sit :mod:`repro.diff.optimize` (gradient-descended static
+cap schedules vs the ILP oracle) and :mod:`repro.diff.train` (the
+``"learned"`` MLP policy's trainer).  See docs/differentiable.md.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+
+#: True when the ``jax`` package is installed (cheap spec probe — does
+#: not import jax, so this is safe at module scope).
+HAS_JAX = importlib.util.find_spec("jax") is not None
+
+_LAZY = {
+    "smooth_operating_point": "relax",
+    "soft_min_time": "relax",
+    "soft_max_time": "relax",
+    "SoftArrays": "softsim",
+    "build_soft_arrays": "softsim",
+    "soft_makespan": "softsim",
+    "soft_makespan_policy": "softsim",
+    "optimize_static_caps": "optimize",
+    "evaluate_static_caps": "optimize",
+    "train_policy": "train",
+}
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    if not HAS_JAX:
+        raise ImportError(
+            f"{__name__}.{name} requires jax; install the optional "
+            f"dependency group: pip install -e .[jax]")
+    import importlib
+
+    mod = importlib.import_module(f"{__name__}.{module}")
+    return getattr(mod, name)
+
+
+__all__ = ["HAS_JAX", *_LAZY]

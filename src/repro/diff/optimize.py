@@ -1,0 +1,131 @@
+"""Gradient descent on static per-node cap (schedules) under the bound.
+
+The decision variable is an unconstrained ``theta`` mapped onto the
+budget simplex::
+
+    caps = cap_floor + softmax(theta) * (bound - sum(cap_floor))
+
+so every iterate satisfies ``sum(caps) == bound`` *exactly* (the
+paper's total-bound constraint) and no cap falls below the duty floor —
+projection-free, like training a categorical head.  A ``(K, N)`` theta
+optimizes a piecewise-constant cap *schedule* over fixed knot times,
+each interval on its own simplex.
+
+Optimization runs on :func:`repro.diff.softsim.soft_makespan` with a
+descending temperature ladder (coarse smoothing finds the basin, cold
+temperatures sharpen onto the exact objective); the ladder is traced,
+so one compile covers the anneal.  ``evaluate_static_caps`` then scores
+the result in the *exact* numpy simulator through the ``"static-caps"``
+vector policy — with ``smooth_lut=True`` by default, the continuous-
+DVFS model the relaxation optimizes (the paper's stepped translator
+rounds interior caps down to the nearest LUT state, which is fair to
+the ILP, whose caps *are* state powers, but systematically strands the
+budget of any continuous optimum; benchmarks/diff_opt.py reports both).
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import JobDependencyGraph
+from repro.core.power import NodeSpec
+
+from .softsim import SoftArrays, build_soft_arrays, soft_makespan
+
+
+class OptResult(NamedTuple):
+    caps: np.ndarray            # (N,) or (K, N) optimized watts
+    soft_makespan: float        # final soft objective (coldest temp)
+    exact_makespan: float       # exact smooth-LUT makespan of ``caps``
+    history: List[Tuple[int, float, float]]  # (step, temperature, soft)
+
+
+def caps_from_theta(theta, cap_floor, bound):
+    """Simplex map (see module docstring); works for (N,) and (K, N)."""
+    free = bound - cap_floor.sum()
+    return cap_floor + jax.nn.softmax(theta, axis=-1) * free
+
+
+def evaluate_static_caps(caps, graph: JobDependencyGraph,
+                         specs: Sequence[NodeSpec], bound: float,
+                         knot_times: Optional[Sequence[float]] = None,
+                         smooth_lut: bool = True) -> float:
+    """Exact makespan of ``caps`` in the numpy batch simulator.
+
+    A ``(K, N)`` schedule is evaluated by pairing the ``"static-caps"``
+    policy with one constant-bound ``bound_schedules`` arrival per knot
+    — each arrival forces a wave boundary at the knot time and the
+    policy swaps the next cap row in, so the schedule lands at exact
+    times (no tick quantization).
+    """
+    from repro.core.batchsim import simulate_batch
+    from repro.policies import VectorStaticCaps
+
+    caps = np.asarray(caps, dtype=float)
+    if caps.ndim == 2:
+        policy = VectorStaticCaps(caps_schedule=caps)
+        schedules = [[(float(t), float(bound)) for t in knot_times]]
+    else:
+        policy = VectorStaticCaps(caps=caps)
+        schedules = None
+    return simulate_batch(graph, specs, [bound], policy=policy,
+                          bound_schedules=schedules,
+                          smooth_lut=smooth_lut)[0].makespan
+
+
+def optimize_static_caps(graph: JobDependencyGraph,
+                         specs: Sequence[NodeSpec], bound: float,
+                         knot_times: Optional[Sequence[float]] = None,
+                         steps: int = 300, lr: float = 0.2,
+                         temperatures: Sequence[float] = (
+                             0.5, 0.2, 0.1, 0.05, 0.02),
+                         soft: Optional[SoftArrays] = None) -> OptResult:
+    """Adam on the simplex-parameterized (scheduled) caps.
+
+    ``knot_times`` switches to a ``(len(knot_times)+1, N)`` schedule.
+    ``steps`` are split evenly across the ``temperatures`` ladder.
+    """
+    if soft is None:
+        soft = build_soft_arrays(graph, specs)
+    cap_floor = jnp.asarray(soft.table.cap_floor)
+    n = soft.n_nodes
+    kt = None if knot_times is None else jnp.asarray(knot_times,
+                                                     dtype=float)
+    shape = (n,) if kt is None else (kt.shape[0] + 1, n)
+    theta = jnp.zeros(shape)
+
+    def objective(theta, temperature):
+        caps = caps_from_theta(theta, cap_floor, bound)
+        return soft_makespan(caps, soft, temperature, knot_times=kt)
+
+    val_grad = jax.jit(jax.value_and_grad(objective))
+
+    # Hand-rolled Adam (no optax dependency).
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    history: List[Tuple[int, float, float]] = []
+    per_temp = max(1, steps // len(temperatures))
+    step = 0
+    for temp in temperatures:
+        for _ in range(per_temp):
+            step += 1
+            val, g = val_grad(theta, temp)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step)
+            vhat = v / (1 - b2 ** step)
+            theta = theta - lr * mhat / (jnp.sqrt(vhat) + eps)
+        history.append((step, float(temp), float(val)))
+
+    caps = np.asarray(caps_from_theta(theta, cap_floor, bound))
+    soft_ms = float(val_grad(theta, temperatures[-1])[0])
+    exact_ms = evaluate_static_caps(
+        caps, graph, specs, bound,
+        knot_times=None if knot_times is None else list(knot_times))
+    return OptResult(caps=caps, soft_makespan=soft_ms,
+                     exact_makespan=exact_ms, history=history)

@@ -1,0 +1,97 @@
+"""Smooth building blocks: soft event selection + differentiable LUT.
+
+Three pure functions, each the relaxation of one hard operation in the
+wave loop:
+
+* :func:`soft_min_time` — the Boltzmann(-softmax) weighted mean replaces
+  the hard ``min`` over a wave's candidate event times.  The mean lies
+  in ``[min, max]`` of the valid candidates, so a wave always advances
+  at least to the earliest event (progress is preserved and a fixed
+  wave budget suffices) and is monotone non-decreasing in temperature
+  (its temperature derivative is a Gibbs variance, which is >= 0).
+* :func:`soft_max_time` — ``T * logsumexp(t / T)``, the matching upper
+  relaxation of ``max`` for the final makespan reduction.
+* :func:`smooth_operating_point` — the ``jax.numpy`` mirror of the
+  ``smooth=True`` path of
+  :func:`repro.core.power.batched_operating_point` (piecewise-linear
+  frequency between adjacent LUT states; the duty region is already
+  continuous).  Parity with the numpy path is pinned by
+  tests/test_diff_grad.py.
+
+All temperatures are traced values — annealing never recompiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.power import DUTY_FLOOR
+
+#: Stand-in for +inf in state tables: finite so that masked/padded
+#: branches stay NaN-free under reverse-mode AD (an ``inf - inf`` in an
+#: unselected ``where`` branch would still poison the gradient).
+BIG_POWER = 1e30
+
+#: Logit floor for invalid candidates in the soft minimum.
+NEG_BIG = -1e30
+
+
+def soft_min_time(times, valid, temperature):
+    """Boltzmann-weighted mean of the ``valid`` entries of ``times``.
+
+    ``times``/``valid`` are ``(..., C)`` candidate arrays; returns
+    ``(...,)``.  With every candidate invalid the result is 0 (the
+    frozen-row convention of the soft wave loop).  As ``temperature``
+    goes to 0 this converges to the hard ``min`` over valid candidates.
+    """
+    logits = jnp.where(valid, -times / temperature, NEG_BIG)
+    w = jax.nn.softmax(logits, axis=-1)
+    return (w * jnp.where(valid, times, 0.0)).sum(axis=-1)
+
+
+def soft_max_time(times, temperature):
+    """Smooth maximum ``T * logsumexp(t / T)`` (>= max, -> max as T->0)."""
+    return temperature * jax.nn.logsumexp(times / temperature, axis=-1)
+
+
+def smooth_operating_point(table, caps):
+    """Differentiable cap -> (freq, duty, power) translation.
+
+    ``table`` is a pytree with the :class:`repro.core.power.LUTTable`
+    field names (``(N, S)`` state tables, ``(N,)`` lane vectors; jnp or
+    numpy leaves); ``caps`` is ``(..., N)``.  Numerically mirrors
+    ``batched_operating_point(table, caps, smooth=True)`` with +inf
+    state-table pads replaced by :data:`BIG_POWER` so every branch is
+    finite (gradients cannot NaN through unselected pads).
+    """
+    sp = jnp.where(jnp.isfinite(table.state_p), table.state_p, BIG_POWER)
+    sf = jnp.asarray(table.state_f)
+    fits = sp <= caps[..., None] + 1e-12
+    idx = fits.sum(axis=-1) - 1            # highest fitting state, -1 if none
+    has_state = idx >= 0
+    idx_c = jnp.maximum(idx, 0)[..., None]
+    p_lo = jnp.take_along_axis(jnp.broadcast_to(sp, caps.shape + sp.shape[-1:]),
+                               idx_c, -1)[..., 0]
+    f_lo = jnp.take_along_axis(jnp.broadcast_to(sf, caps.shape + sf.shape[-1:]),
+                               idx_c, -1)[..., 0]
+    idx_n = jnp.minimum(idx_c + 1, sp.shape[-1] - 1)
+    p_hi = jnp.take_along_axis(jnp.broadcast_to(sp, caps.shape + sp.shape[-1:]),
+                               idx_n, -1)[..., 0]
+    f_hi = jnp.take_along_axis(jnp.broadcast_to(sf, caps.shape + sf.shape[-1:]),
+                               idx_n, -1)[..., 0]
+    denom = p_hi - p_lo
+    ok = denom > 0
+    t = jnp.where(ok, (caps - p_lo) / jnp.where(ok, denom, 1.0), 0.0)
+    t = jnp.clip(t, 0.0, 1.0)
+    freq_fit = f_lo + t * (f_hi - f_lo)
+    q = jnp.clip((caps - table.idle_w) / table.span, DUTY_FLOOR, 1.0)
+    freq = jnp.where(has_state, freq_fit,
+                     jnp.broadcast_to(table.f_min, caps.shape))
+    duty = jnp.where(has_state, 1.0, q)
+    floor_draw = table.idle_w + q * table.span
+    power = jnp.where(has_state,
+                      jnp.minimum(caps, jnp.broadcast_to(table.p_max,
+                                                         caps.shape)),
+                      floor_draw)
+    return freq, duty, power

@@ -1,0 +1,255 @@
+"""The soft wave loop: ``soft_makespan`` and its policy-driven variant.
+
+Structure mirrors :meth:`repro.core.batchsim.BatchSimulator.run` wave
+for wave, with the two relaxations of :mod:`repro.diff.relax` swapped
+in and the dynamic ``while`` replaced by a fixed-length ``lax.scan``
+(reverse-mode AD does not support ``lax.while_loop``).  The discrete
+state machine (which lane finishes, which job starts) is still driven
+by *hard* comparisons — but on smoothly-computed times, so gradients
+flow through the event *times* while the event *ordering* stays
+combinatorial.  Consequences, documented in docs/differentiable.md:
+
+* the Boltzmann advance is >= the earliest candidate, so every wave
+  still consumes at least one event and ``max_waves = J + knots +
+  slack`` statically bounds the scan;
+* at an exact event *tie* the ordering is non-differentiable in the
+  underlying problem; the relaxation averages over the tie instead of
+  picking a side, which is exactly where its gradients stop being
+  trustworthy (see the tie-breaking test in test_sim_invariants.py).
+
+``soft_makespan`` is ``jax.grad``/``jit``/``vmap``-compatible; the
+graph geometry enters by closure (compile once per graph, like the
+engine's per-bucket steppers), caps and temperature are traced.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batchsim import build_graph_arrays
+from repro.core.graph import JobDependencyGraph
+from repro.core.power import LUTTable, NodeSpec
+
+from .relax import smooth_operating_point, soft_min_time, soft_max_time
+
+BIG_TIME = 1e30
+
+
+class SoftArrays(NamedTuple):
+    """Static geometry for the soft loop (host arrays + scan bounds).
+
+    Built once per (graph, cluster) by :func:`build_soft_arrays`; the
+    arrays become trace-time constants, ``max_waves``/``settle_iters``
+    size the statically-unrolled control structure.
+    """
+
+    work_pad: np.ndarray      # (J+1,) work units, sentinel 0
+    rho_pad: np.ndarray       # (J+1,) cpu_frac, sentinel 1
+    node_seq: np.ndarray      # (N, K) per-lane job slots, J padded
+    deps_pad: np.ndarray      # (J+1, D) dependency slots, J padded
+    table: LUTTable           # (N, S)/(N,) cluster tables
+    n_jobs: int               # J
+    n_nodes: int              # N
+    max_waves: int            # scan length (before schedule knots)
+    settle_iters: int         # unrolled start/instant-complete passes
+
+
+def build_soft_arrays(graph: JobDependencyGraph,
+                      specs: Sequence[NodeSpec],
+                      extra_waves: int = 4) -> SoftArrays:
+    """Flatten (graph, cluster) for the soft loop.
+
+    Every wave consumes at least one completion (the Boltzmann advance
+    is >= the earliest candidate), so ``J + extra_waves`` waves always
+    suffice; each settle pass needs one extra iteration per link of a
+    zero-work dependency chain, bounded above by the zero-work job
+    count.
+    """
+    ga = build_graph_arrays(graph, specs)
+    j = ga.n_jobs
+    zero_work = int((ga.work_pad[:j] <= 0.0).sum())
+    return SoftArrays(
+        work_pad=ga.work_pad, rho_pad=ga.rho_pad, node_seq=ga.node_seq,
+        deps_pad=ga.deps_pad, table=ga.table, n_jobs=j,
+        n_nodes=ga.n_nodes, max_waves=j + extra_waves,
+        settle_iters=2 + zero_work)
+
+
+class _SoftState(NamedTuple):
+    ptr: jnp.ndarray        # (N,) i32 position in each lane's sequence
+    running: jnp.ndarray    # (N,) bool
+    remaining: jnp.ndarray  # (N,) work units left on the current job
+    completed: jnp.ndarray  # (J+1,) bool, sentinel born True
+    t: jnp.ndarray          # scalar row time
+    end_t: jnp.ndarray      # (J+1,) completion times (0 until completed)
+
+
+def _cur(soft: SoftArrays, ptr) -> jnp.ndarray:
+    n = soft.n_nodes
+    return jnp.asarray(soft.node_seq)[jnp.arange(n), ptr]
+
+
+def _settle(soft: SoftArrays, st: _SoftState) -> _SoftState:
+    """Start every ready job, complete zero-work jobs instantly; one
+    unrolled pass per possible cascade link (mirrors ``_settle``)."""
+    j = soft.n_jobs
+    for _ in range(soft.settle_iters):
+        cur = _cur(soft, st.ptr)
+        deps_ok = st.completed[jnp.asarray(soft.deps_pad)[cur]].all(axis=-1)
+        ready = (~st.running) & (cur < j) & deps_ok
+        running = st.running | ready
+        remaining = jnp.where(ready, jnp.asarray(soft.work_pad)[cur],
+                              st.remaining)
+        instant = running & (remaining <= 0.0)
+        tgt = jnp.where(instant, cur, j)
+        st = _SoftState(
+            ptr=st.ptr + instant, running=running & ~instant,
+            remaining=remaining,
+            completed=st.completed.at[tgt].set(True), t=st.t,
+            end_t=st.end_t.at[tgt].set(st.t))   # sentinel slot is junk
+    return st
+
+
+def _init_state(soft: SoftArrays, dtype) -> _SoftState:
+    n, j = soft.n_nodes, soft.n_jobs
+    completed = jnp.zeros(j + 1, dtype=bool).at[j].set(True)
+    return _SoftState(
+        ptr=jnp.zeros(n, dtype=jnp.int32),
+        running=jnp.zeros(n, dtype=bool),
+        remaining=jnp.zeros(n, dtype=dtype),
+        completed=completed, t=jnp.zeros((), dtype=dtype),
+        end_t=jnp.zeros(j + 1, dtype=dtype))
+
+
+def _soft_run(caps_of, soft: SoftArrays, temperature, n_extra_events: int,
+              knot_times: Optional[jnp.ndarray], dtype):
+    """Shared scan: ``caps_of(t, st) -> (N,)`` supplies the wave's caps."""
+    j = soft.n_jobs
+    table = soft.table
+    nk = 0 if knot_times is None else knot_times.shape[0]
+    if nk:
+        knots_pad = jnp.concatenate(
+            [knot_times.astype(dtype), jnp.full((1,), BIG_TIME, dtype)])
+    st0 = _settle(soft, _init_state(soft, dtype))
+
+    def wave(st, _):
+        done = st.completed[:j].all()
+        caps = caps_of(st.t, st)
+        freq, duty, power = smooth_operating_point(table, caps)
+        cur = _cur(soft, st.ptr)
+        rho = jnp.asarray(soft.rho_pad)[cur]
+        slowdown = rho * (jnp.asarray(table.f_nom) / freq) + (1.0 - rho)
+        rate = jnp.where(st.running,
+                         jnp.asarray(table.speed) * duty / slowdown, 0.0)
+        live = st.running & (rate > 0) & ~done
+        rate_safe = jnp.where(live, rate, 1.0)
+        t_fin = jnp.where(live, jnp.maximum(st.remaining, 0.0) / rate_safe,
+                          BIG_TIME)
+        times, valid = t_fin, live
+        if nk:
+            knot = (st.t >= knots_pad[:nk]).sum()
+            t_knot = knots_pad[knot] - st.t
+            times = jnp.concatenate([times, t_knot[None]])
+            valid = jnp.concatenate([valid, ((knot < nk) & ~done)[None]])
+        delta = soft_min_time(times, valid, temperature)
+        finishing = st.running & (t_fin <= delta * (1 + 1e-6) + 1e-9)
+        t_new = st.t + delta
+        tgt = jnp.where(finishing, cur, j)
+        st = _SoftState(
+            ptr=st.ptr + finishing, running=st.running & ~finishing,
+            remaining=jnp.where(finishing, 0.0,
+                                st.remaining - rate * delta),
+            completed=st.completed.at[tgt].set(True), t=t_new,
+            end_t=st.end_t.at[tgt].set(t_new))
+        return _settle(soft, st), None
+
+    n_waves = soft.max_waves + n_extra_events
+    st, _ = jax.lax.scan(wave, st0, None, length=n_waves)
+    makespan = soft_max_time(st.end_t[:j], temperature)
+    return makespan, st
+
+
+def soft_makespan(caps, soft: SoftArrays, temperature,
+                  knot_times=None, return_aux: bool = False):
+    """Differentiable makespan of per-node cap assignment ``caps``.
+
+    ``caps`` is ``(N,)`` static watts, or ``(K, N)`` piecewise-constant
+    with ``knot_times`` the ``(K-1,)`` absolute switch times (caps row
+    ``k`` applies from ``knot_times[k-1]``; knot crossings are wave
+    boundaries, like scheduled bound arrivals in the exact backends).
+    ``temperature`` controls both relaxations; as it goes to 0 the
+    result converges to the ``BatchSimulator(smooth_lut=True)`` exact
+    makespan under the same caps.  Gradients flow to ``caps`` (not to
+    ``knot_times`` — knot *timing* is a hard branch by design).
+
+    With ``return_aux`` also returns ``{"done": all-jobs-completed,
+    "end_t": per-job soft completion times}`` for diagnostics.
+    """
+    caps = jnp.asarray(caps)
+    dtype = jnp.result_type(caps, 0.1)
+    scheduled = caps.ndim == 2
+    if scheduled:
+        if knot_times is None:
+            raise ValueError("(K, N) caps need knot_times")
+        knot_times = jnp.asarray(knot_times)
+        nk = knot_times.shape[0]
+        if caps.shape[0] != nk + 1:
+            raise ValueError(f"caps rows {caps.shape[0]} != "
+                             f"len(knot_times) + 1 = {nk + 1}")
+
+        def caps_of(t, st):
+            k = (t >= knot_times).sum()
+            return caps[k]
+    else:
+        knot_times = None
+        nk = 0
+
+        def caps_of(t, st):
+            return caps
+
+    ms, st = _soft_run(caps_of, soft, jnp.asarray(temperature, dtype), nk,
+                       knot_times, dtype)
+    if return_aux:
+        return ms, {"done": st.completed[:soft.n_jobs].all(),
+                    "end_t": st.end_t[:soft.n_jobs]}
+    return ms
+
+
+def soft_makespan_policy(params, soft: SoftArrays, bound, temperature,
+                         return_aux: bool = False):
+    """Differentiable makespan under the ``"learned"`` MLP policy.
+
+    Each wave recomputes ``caps = f(state)`` from the same xp-generic
+    core the event/vector/jax adapters run
+    (:func:`repro.policies.learned.compute_caps` with ``jax.numpy``),
+    so a parameter vector trained through this function means the same
+    policy everywhere.  Gradients flow to ``params`` (pytree of MLP
+    leaves) and to ``bound``.
+    """
+    from repro.policies.learned import compute_caps
+
+    table = soft.table
+    bound = jnp.asarray(bound)
+    dtype = jnp.result_type(bound, 0.1)
+    n_active = jnp.asarray(float(soft.n_nodes), dtype)
+
+    def caps_of(t, st):
+        cur = _cur(soft, st.ptr)
+        rho = jnp.asarray(soft.rho_pad)[cur]
+        return compute_caps(
+            jnp, params, running=st.running,
+            rho=jnp.where(st.running, rho, 0.0), bound=bound * 1.0,
+            n_active=n_active, p_max=jnp.asarray(table.p_max),
+            cap_floor=jnp.asarray(table.cap_floor),
+            idle_w=jnp.asarray(table.idle_w))
+
+    ms, st = _soft_run(caps_of, soft, jnp.asarray(temperature, dtype), 0,
+                       None, dtype)
+    if return_aux:
+        return ms, {"done": st.completed[:soft.n_jobs].all(),
+                    "end_t": st.end_t[:soft.n_jobs]}
+    return ms

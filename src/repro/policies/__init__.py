@@ -11,6 +11,7 @@ Registered keys:
   ``countdown``    — COUNTDOWN-style per-node timeout slack reclamation
                      (arXiv 1806.07258 / 1909.12684)
   ``oracle``       — zero-latency clairvoyant water-filling upper bound
+  ``learned``      — gradient-trained MLP cap split (repro.diff.train)
 
 Authoring a new policy: subclass :class:`PowerPolicy` in a new module,
 decorate it with ``@register_policy("your-key")``, and import the module
@@ -26,27 +27,31 @@ from .registry import (available_policies, get_policy,  # noqa: F401
 from . import countdown  # noqa: F401,E402
 from . import equal_share  # noqa: F401,E402
 from . import ilp_static  # noqa: F401,E402
+from . import learned  # noqa: F401,E402
 from . import online_heuristic  # noqa: F401,E402
 from . import oracle  # noqa: F401,E402
 
 from .countdown import CountdownPolicy  # noqa: F401,E402
 from .equal_share import EqualSharePolicy  # noqa: F401,E402
 from .ilp_static import IlpMakespanPolicy, IlpStaticPolicy  # noqa: F401,E402
+from .learned import LearnedPolicy, VectorLearned  # noqa: F401,E402
 from .online_heuristic import OnlineHeuristicPolicy  # noqa: F401,E402
 from .oracle import OraclePolicy  # noqa: F401,E402
 
 # Vectorized adapters for the batch backend (separate registry).
 from .vector import (VectorEqualShare, VectorIlpStatic,  # noqa: F401,E402
                      VectorOnlineHeuristic, VectorOracle, VectorPolicy,
-                     get_vector_policy, has_vector_policy,
-                     register_vector_policy, vector_policies)
+                     VectorStaticCaps, get_vector_policy,
+                     has_vector_policy, register_vector_policy,
+                     vector_policies)
 
 __all__ = [
     "Action", "ClusterView", "PowerPolicy", "SetCap", "Wake",
     "available_policies", "get_policy", "register_policy",
     "CountdownPolicy", "EqualSharePolicy", "IlpMakespanPolicy",
-    "IlpStaticPolicy", "OnlineHeuristicPolicy", "OraclePolicy",
-    "VectorEqualShare", "VectorIlpStatic", "VectorOnlineHeuristic",
-    "VectorOracle", "VectorPolicy", "get_vector_policy",
+    "IlpStaticPolicy", "LearnedPolicy", "OnlineHeuristicPolicy",
+    "OraclePolicy", "VectorEqualShare", "VectorIlpStatic",
+    "VectorLearned", "VectorOnlineHeuristic", "VectorOracle",
+    "VectorPolicy", "VectorStaticCaps", "get_vector_policy",
     "has_vector_policy", "register_vector_policy", "vector_policies",
 ]

@@ -121,7 +121,7 @@ class TestExactPolicies:
     def test_registry_exposes_exact_policies(self):
         assert "equal-share" in EXACT and "ilp" in EXACT \
             and "oracle" in EXACT
-        assert APPROX == ["heuristic"]
+        assert APPROX == ["heuristic", "learned"]
 
     @pytest.mark.parametrize("policy", EXACT)
     @pytest.mark.parametrize(

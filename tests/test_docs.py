@@ -25,6 +25,7 @@ import repro.cluster.scheduler
 import repro.core.batchsim
 import repro.core.scenarios
 import repro.core.sweep
+import repro.policies.learned
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOCS = ROOT / "docs"
@@ -33,7 +34,7 @@ FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
 DOCTEST_MODULES = [repro.core.sweep, repro.core.batchsim,
                    repro.core.scenarios, repro.cluster.arrivals,
                    repro.cluster.policies, repro.cluster.scheduler,
-                   repro.cluster.metrics]
+                   repro.cluster.metrics, repro.policies.learned]
 
 
 @pytest.mark.parametrize("mod", DOCTEST_MODULES,

@@ -176,3 +176,79 @@ class TestMakespanMILP:
         # the depth abstraction may transiently exceed P, but never by more
         # than one node's swing; audit stays within 1.5x
         assert peak <= 1.5 * P
+
+
+# ------------------------------------------------- smooth translator (diff)
+class TestSmoothTranslator:
+    """``batched_operating_point(..., smooth=True)`` — the piecewise-linear
+    relaxation the differentiable layer optimizes through (numpy side;
+    the jnp mirror is parity-tested in ``tests/test_diff_grad.py``)."""
+
+    def _table(self):
+        import numpy as np
+
+        from repro.core.power import lut_table
+
+        return np, lut_table(heterogeneous_cluster(4))
+
+    def test_default_path_is_bit_identical(self):
+        """The ``smooth=`` kwarg must leave the stepped translator alone,
+        bit for bit — every existing simulator result rides on it."""
+        np, table = self._table()
+        from repro.core.power import batched_operating_point
+
+        rng = np.random.default_rng(0)
+        caps = rng.uniform(0.0, 1.3 * table.p_max, size=(16, 4))
+        default = batched_operating_point(table, caps)
+        stepped = batched_operating_point(table, caps, smooth=False)
+        for a, b in zip(default, stepped):
+            assert np.array_equal(a, b)
+
+    def test_agrees_with_stepped_at_state_powers(self):
+        """At caps exactly equal to LUT state powers the relaxation and
+        the hard translator are the same point — the interpolation knots
+        *are* the states."""
+        np, table = self._table()
+        from repro.core.power import batched_operating_point
+
+        caps = np.where(np.isfinite(table.state_p.T),
+                        table.state_p.T, table.p_max)  # (S, N) state grid
+        f_hard, d_hard, p_hard = batched_operating_point(table, caps)
+        f_s, d_s, p_s = batched_operating_point(table, caps, smooth=True)
+        assert np.allclose(f_s, f_hard, rtol=1e-12)
+        assert np.allclose(d_s, d_hard, rtol=1e-12)
+        assert np.allclose(p_s, p_hard, rtol=1e-12)
+
+    def test_smooth_point_is_continuous_and_monotone_in_cap(self):
+        """Between the knots: no frequency steps (the whole reason the
+        relaxation exists), and more cap never yields less frequency or
+        less power."""
+        np, table = self._table()
+        from repro.core.power import batched_operating_point
+
+        lo = float(table.idle_w.min())
+        hi = float(table.p_max.max()) * 1.2
+        grid = np.linspace(lo, hi, 4001)
+        caps = np.repeat(grid[:, None], table.n_nodes, axis=1)
+        freq, _, power = batched_operating_point(table, caps, smooth=True)
+        h = grid[1] - grid[0]
+        df = np.diff(freq, axis=0)
+        dp = np.diff(power, axis=0)
+        assert (df >= 0).all() and (dp >= -1e-12).all()
+        # Lipschitz in the cap: steps vanish with the grid spacing.
+        max_slope_f = (np.ptp(table.state_f) / max(
+            float(np.diff(np.sort(table.state_p[np.isfinite(
+                table.state_p)])).min()), 1e-9)) * 4
+        assert df.max() <= max(max_slope_f, 1.0) * h * 4
+        assert dp.max() <= 1.01 * h
+
+    def test_smooth_power_never_exceeds_cap_above_floor(self):
+        """In the duty region the draw is the floor draw; above it the
+        relaxed draw is ``min(cap, p_max)`` — never above the cap."""
+        np, table = self._table()
+        from repro.core.power import batched_operating_point, cap_floor_w
+
+        rng = np.random.default_rng(7)
+        caps = rng.uniform(table.p_min, table.p_max, size=(32, 4))
+        _, _, power = batched_operating_point(table, caps, smooth=True)
+        assert (power <= caps + 1e-9).all()
