@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import json
+import socket
 import time
 from contextlib import contextmanager
 from typing import Callable, Dict, List
@@ -15,12 +16,47 @@ from typing import Callable, Dict, List
 BENCH_RECORDS: Dict[str, dict] = {}
 
 
+def bench_meta() -> Dict[str, object]:
+    """Provenance block written next to the bench payloads.
+
+    ``schema_version``, ``backend``, and ``device_kind`` gate
+    comparability in ``repro.obs.regress`` (mismatch -> refusal, not a
+    bogus diff); ``timestamp``/``hostname``/``device_count`` are
+    informational only and never compared.
+    """
+    from repro.obs.regress import SCHEMA_VERSION
+
+    meta: Dict[str, object] = {
+        "schema_version": SCHEMA_VERSION,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "hostname": socket.gethostname(),
+    }
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        meta["backend"] = jax.default_backend()
+        meta["device_kind"] = dev.device_kind
+        meta["device_count"] = jax.device_count()
+    except Exception:  # pragma: no cover - jax always present in CI
+        meta["backend"] = "unavailable"
+        meta["device_kind"] = "unavailable"
+    return meta
+
+
 def write_bench_json(path: str) -> bool:
-    """Dump :data:`BENCH_RECORDS` to ``path``; False when empty."""
+    """Dump :data:`BENCH_RECORDS` to ``path``; False when empty.
+
+    The payload is ``{"meta": bench_meta(), "benches": {...}}`` —
+    ``repro.obs.regress`` refuses to diff artifacts whose meta blocks
+    disagree on schema/backend/device, and still accepts legacy
+    unwrapped payloads via ``split_payload``.
+    """
     if not BENCH_RECORDS:
         return False
+    payload = {"meta": bench_meta(), "benches": BENCH_RECORDS}
     with open(path, "w") as fh:
-        json.dump(BENCH_RECORDS, fh, indent=2, sort_keys=True)
+        json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")
     return True
 

@@ -84,6 +84,7 @@ from repro.core.batchsim import (BatchArrays, GraphArrays,
 from repro.core.graph import JobDependencyGraph
 from repro.core.power import NodeSpec
 from repro.core.simulator import OVER_BUDGET_RTOL, SimResult
+from repro.obs import trace as obs_trace
 from repro.kernels.power_step import (BIG_TIME, StepTables,
                                       default_interpret, power_step,
                                       step_tables)
@@ -675,6 +676,17 @@ class JaxBatchSimulator:
             out = _run_batch(*args, **statics)
         prof.dispatch_s = time.perf_counter() - t1
         prof.compile_s = prof.dispatch_s if prof.compiled else 0.0
+        # Trace spans reuse the profile's own measurements (one timer,
+        # two consumers) — tracing cannot skew what the profile reports
+        # and, being host-side only, cannot perturb the jit cache key.
+        if obs_trace.enabled():
+            args = {"rows": self.n_rows, "devices": self.n_shards}
+            obs_trace.complete("pack", t0, prof.pack_s, cat="engine",
+                               track="engine", args=args)
+            obs_trace.complete("compile" if prof.compiled else "dispatch",
+                               t1, prof.dispatch_s, cat="engine",
+                               track="engine",
+                               args=dict(args, compiled=prof.compiled))
         return _Pending(out=out, profile=prof)
 
     def fetch(self, pending: _Pending) -> List[SimResult]:
@@ -691,6 +703,12 @@ class JaxBatchSimulator:
         prof.run_s = t1 - t0
         out = _device_get(pending.out)
         prof.transfer_s = time.perf_counter() - t1
+        if obs_trace.enabled():
+            args = {"rows": self.n_rows, "devices": self.n_shards}
+            obs_trace.complete("run", t0, prof.run_s, cat="engine",
+                               track="engine", args=args)
+            obs_trace.complete("transfer", t1, prof.transfer_s,
+                               cat="engine", track="engine", args=args)
         out = {k: np.asarray(v)[:self.n_rows] for k, v in out.items()}
         self._check_failures(out)
         return self._results(out)

@@ -53,6 +53,8 @@ from repro.core.power import (max_useful_cluster_bound,
                               min_feasible_cluster_bound)
 from repro.core.scenarios import FamilyMember
 from repro.core.sweep import Scenario, SweepEngine, SweepResult
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import default_registry
 
 from .arrivals import ArrivalJob, ArrivalTrace
 from .policies import (EPS_W, ClusterPolicy, ClusterState, JobView,
@@ -290,6 +292,16 @@ class ClusterScheduler:
         util: List[Tuple[float, float]] = []
         now = 0.0
         max_events = 20 * len(pending) + 100
+        # DES observability: sim-time events on the "cluster" track,
+        # wait/queue metrics in the process-default registry.
+        metrics = default_registry()
+        wait_h = metrics.histogram("cluster_wait_s")
+        wait_g = metrics.gauge("cluster_job_wait_s")
+        queue_g = metrics.gauge("cluster_queue_depth")
+        admitted_c = metrics.counter("cluster_admitted")
+        completed_c = metrics.counter("cluster_completed")
+        stalls_c = metrics.counter("cluster_stalls")
+        tracing = obs_trace.enabled()
         for _ in range(max_events):
             # 1. next event time: first arrival or earliest predicted
             #    completion (rates are constant until then, so the
@@ -315,9 +327,24 @@ class ClusterScheduler:
                 run = running.pop(name)
                 run.progress = 1.0
                 run.end_t = now
+                completed_c.inc()
+                if tracing:
+                    obs_trace.complete(
+                        "job", 0.0, now - run.admit_t, cat="cluster",
+                        track="cluster", lane=f"user:{run.job.user}",
+                        ts=run.admit_t,
+                        args={"job": name, "member": run.member.name})
+                    obs_trace.instant("complete", cat="cluster",
+                                      track="cluster", ts=now,
+                                      args={"job": name})
             # 4. arrivals.
             while pending and pending[0].t <= now + EPS_PROGRESS:
-                queue.append(pending.pop(0).name)
+                job = pending.pop(0)
+                queue.append(job.name)
+                if tracing:
+                    obs_trace.instant("arrive", cat="cluster",
+                                      track="cluster", ts=now,
+                                      args={"job": job.name})
             # 5. admission.
             free = self.total_nodes \
                 - sum(len(r.member.graph.nodes)
@@ -337,6 +364,15 @@ class ClusterScheduler:
                 run = runs[view.name]
                 run.admit_t = now
                 running[view.name] = run
+                wait = now - run.job.t
+                admitted_c.inc()
+                wait_h.observe(wait)
+                wait_g.set(wait, job=view.name)
+                if tracing:
+                    obs_trace.instant("admit", cat="cluster",
+                                      track="cluster", ts=now,
+                                      args={"job": view.name,
+                                            "wait_s": wait})
             if running and sum(len(r.member.graph.nodes)
                                for r in running.values()) \
                     > self.total_nodes:
@@ -356,9 +392,20 @@ class ClusterScheduler:
                             or abs(run.watts - w) > EPS_W:
                         run.history.append((now, w))
                 util.append((now, sum(split.values())))
+            queue_g.set(len(queue))
+            if tracing:
+                obs_trace.counter("jobs",
+                                  {"queued": len(queue),
+                                   "running": len(running)},
+                                  cat="cluster", track="cluster", ts=now)
             # 7. stall detection: jobs are waiting, nothing is
             #    running, and no future arrival can change the state.
             if queue and not running and not pending:
+                stalls_c.inc()
+                if tracing:
+                    obs_trace.instant("stall", cat="cluster",
+                                      track="cluster", ts=now,
+                                      args={"queued": len(queue)})
                 raise SchedulerError(
                     f"policy {self.policy.name!r} stalled: "
                     f"{len(queue)} jobs queued, none admissible")

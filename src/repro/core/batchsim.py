@@ -66,9 +66,12 @@ and a mixed-shape padded batch with a per-row bound schedule::
 from __future__ import annotations
 
 import math
+import time
 from typing import (List, NamedTuple, Optional, Sequence, Tuple, Union)
 
 import numpy as np
+
+from repro.obs import trace as obs_trace
 
 from .graph import JobDependencyGraph, JobId
 from .power import (LUTTable, NodeSpec, batched_operating_point,
@@ -650,6 +653,7 @@ class BatchSimulator:
     def run(self) -> List[SimResult]:
         """Advance every row to completion; one :class:`SimResult` per
         row, in row order."""
+        run_t0 = time.perf_counter()
         b, n, j = self.n_rows, self.n_nodes, self.n_jobs_total
         self.bounds = self._bounds0.copy()
         self.completed = np.zeros((b, j + 1), dtype=bool)
@@ -762,6 +766,14 @@ class BatchSimulator:
                                                 self.makespan)):
                 if not tr or tr[-1][0] < float(m):
                     tr.append((float(m), float(idle_total[b_row])))
+        # One span for the whole wave loop (never per-wave: the loop is
+        # the vector backend's hot path and waves number in the
+        # thousands; the disabled path must stay O(1) per run).
+        if obs_trace.enabled():
+            obs_trace.complete("wave-loop", run_t0,
+                               time.perf_counter() - run_t0, cat="vector",
+                               track="engine",
+                               args={"rows": b, "waves": steps})
         return self._results()
 
     # -------------------------------------------------------------- output

@@ -54,6 +54,14 @@ class SimResult:
                                                    default_factory=list)
     job_starts: Dict[JobId, float] = field(repr=False, default_factory=dict)
     job_ends: Dict[JobId, float] = field(repr=False, default_factory=dict)
+    #: Per-node power samples ``(t, (p_node0, p_node1, ...))`` in
+    #: ``graph.nodes`` order, recorded only under ``node_trace=True``
+    #: at the same cadence as :attr:`power_trace`.  This is what makes
+    #: the paper's redistribution *visible*: the observability layer
+    #: (:func:`repro.obs.timeline.sim_tracks`) renders these as stacked
+    #: counter tracks against the bound line.
+    node_power_trace: List[Tuple[float, Tuple[float, ...]]] = field(
+        repr=False, default_factory=list)
 
     def speedup_vs(self, baseline: "SimResult") -> float:
         """``baseline.makespan / self.makespan``; a zero-makespan result
@@ -99,6 +107,11 @@ class Simulator:
 
     ``bound_schedule`` is an iterable of ``(time, new_bound_w)`` power
     bound arrivals; each triggers the policy's ``on_bound_change`` hook.
+
+    ``node_trace=True`` additionally records per-node power samples
+    into :attr:`SimResult.node_power_trace` at the :attr:`power_trace`
+    cadence (so it is likewise disabled by ``trace_every=None``); off
+    by default because sweeps only need the cluster total.
     """
 
     def __init__(self, graph: JobDependencyGraph, specs: Sequence[NodeSpec],
@@ -107,7 +120,8 @@ class Simulator:
                  assignment: Optional[PowerAssignment] = None,
                  latency_s: float = 0.05, max_events: int = 5_000_000,
                  trace_every: Optional[float] = 0.0,
-                 bound_schedule: Iterable[Tuple[float, float]] = ()):
+                 bound_schedule: Iterable[Tuple[float, float]] = (),
+                 node_trace: bool = False):
         graph.topological_order()
         self.graph = graph
         self.node_ids = graph.nodes
@@ -137,7 +151,9 @@ class Simulator:
         self._seq = itertools.count()
         self._now = 0.0
         self._trace_every = trace_every
+        self._node_trace = node_trace
         self._power_trace: List[Tuple[float, float]] = []
+        self._node_power_trace: List[Tuple[float, Tuple[float, ...]]] = []
         self._energy = 0.0
         self._peak = 0.0
         self._over_budget_time = 0.0
@@ -176,7 +192,13 @@ class Simulator:
             if self._last_power > self.bound * (1 + OVER_BUDGET_RTOL) \
                     + 1e-9:
                 self._over_budget_time += dt
-        p = sum(self._node_power(rt) for rt in self.nodes.values())
+        p_nodes: Optional[Tuple[float, ...]] = None
+        if self._node_trace:
+            p_nodes = tuple(self._node_power(self.nodes[nid])
+                            for nid in self.node_ids)
+            p = sum(p_nodes)
+        else:
+            p = sum(self._node_power(rt) for rt in self.nodes.values())
         self._last_power_t = t
         self._last_power = p
         self._peak = max(self._peak, p)
@@ -184,9 +206,13 @@ class Simulator:
             return
         if self._power_trace and self._power_trace[-1][0] == t:
             self._power_trace[-1] = (t, p)
+            if p_nodes is not None:
+                self._node_power_trace[-1] = (t, p_nodes)
         elif (self._trace_every == 0.0 or not self._power_trace
               or t - self._power_trace[-1][0] >= self._trace_every):
             self._power_trace.append((t, p))
+            if p_nodes is not None:
+                self._node_power_trace.append((t, p_nodes))
 
     # -------------------------------------------------------- policy actions
     def _apply_actions(self, actions, t: float) -> None:
@@ -362,6 +388,7 @@ class Simulator:
             power_trace=self._power_trace,
             job_starts=self.job_starts,
             job_ends=self.job_ends,
+            node_power_trace=self._node_power_trace,
         )
 
 
@@ -371,9 +398,11 @@ def simulate(graph: JobDependencyGraph, specs: Sequence[NodeSpec],
              assignment: Optional[PowerAssignment] = None,
              latency_s: float = 0.05,
              trace_every: Optional[float] = 0.0,
-             bound_schedule: Iterable[Tuple[float, float]] = ()) -> SimResult:
+             bound_schedule: Iterable[Tuple[float, float]] = (),
+             node_trace: bool = False) -> SimResult:
     """One-call façade used by benchmarks and tests."""
     return Simulator(graph, specs, cluster_bound_w, policy=policy,
                      assignment=assignment, latency_s=latency_s,
                      trace_every=trace_every,
-                     bound_schedule=bound_schedule).run()
+                     bound_schedule=bound_schedule,
+                     node_trace=node_trace).run()

@@ -52,6 +52,8 @@ from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple, Union)
 
+from repro.obs import trace as obs_trace
+
 from .batchsim import BatchSimulator, estimate_row_bytes
 from .graph import JobDependencyGraph
 from .ilp import PowerAssignment
@@ -693,6 +695,7 @@ class SweepEngine:
     def _run_batched(self, scenarios: Sequence[Scenario],
                      requested: str) -> SweepResult:
         records: List[Optional[SweepRecord]] = [None] * len(scenarios)
+        plan_t0 = time.perf_counter()
         plans = [self._plan_backend(s, requested) for s in scenarios]
         groups: Dict[tuple, List[int]] = {}
         leftovers: List[int] = []
@@ -704,6 +707,13 @@ class SweepEngine:
                                   []).append(k)
             else:
                 leftovers.append(k)
+        if obs_trace.enabled():
+            obs_trace.complete("plan", plan_t0,
+                               time.perf_counter() - plan_t0, cat="sweep",
+                               track="engine",
+                               args={"scenarios": len(scenarios),
+                                     "buckets": len(groups),
+                                     "leftovers": len(leftovers)})
 
         profile = None
         jax_align = 1
@@ -816,25 +826,51 @@ class SweepEngine:
                         if self.pipeline:
                             in_flight.append(
                                 (sim, pending, batch_idx, bucket, t0))
+                            if obs_trace.enabled():
+                                obs_trace.complete(
+                                    "bucket:dispatch", t0,
+                                    time.perf_counter() - t0, cat="sweep",
+                                    track="engine",
+                                    args={"bucket": bucket,
+                                          "rows": len(batch_idx)})
                             continue
                         results = sim.fetch(pending)
                     else:
                         results = sim.run()
                     finish(batch_idx, results, t0, backend, bucket)
+                    if obs_trace.enabled():
+                        obs_trace.complete(
+                            "bucket", t0, time.perf_counter() - t0,
+                            cat="sweep", track="engine",
+                            args={"bucket": bucket,
+                                  "rows": len(batch_idx)})
                 except Exception as e:  # noqa: BLE001
                     fail(batch_idx, f"{type(e).__name__}: {e}", t0,
                          backend, bucket)
+                    obs_trace.instant("bucket-failed", cat="sweep",
+                                      track="engine",
+                                      args={"bucket": bucket})
 
         # Phase B — fetch in dispatch order: block until each chunk's
         # device work finishes, then pull its whole output pytree in
         # one transfer.  (Profiles were already recorded at dispatch.)
         for sim, pending, batch_idx, bucket, t0 in in_flight:
+            fetch_t0 = time.perf_counter()
             try:
                 results = sim.fetch(pending)
                 finish(batch_idx, results, t0, "jax", bucket)
+                if obs_trace.enabled():
+                    obs_trace.complete(
+                        "bucket:fetch", fetch_t0,
+                        time.perf_counter() - fetch_t0, cat="sweep",
+                        track="engine",
+                        args={"bucket": bucket, "rows": len(batch_idx)})
             except Exception as e:  # noqa: BLE001
                 fail(batch_idx, f"{type(e).__name__}: {e}", t0, "jax",
                      bucket)
+                obs_trace.instant("bucket-failed", cat="sweep",
+                                  track="engine",
+                                  args={"bucket": bucket})
 
         if leftovers:
             left = [scenarios[k] for k in leftovers]

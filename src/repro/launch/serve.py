@@ -29,8 +29,39 @@ import sys
 import time
 
 
+def _emit_power_timelines(family) -> int:
+    """Render one exemplar per corpus member as per-node power tracks.
+
+    The streaming replay itself runs on the batched backends, which
+    keep no power traces (``trace_every=None`` is part of the compile
+    contract) — so the power-timeline view of a traced replay comes
+    from re-running one scenario per distinct graph through the event
+    simulator with ``node_trace=True``.  Only called when tracing is
+    enabled; returns the number of events emitted.
+    """
+    from ..core.simulator import simulate
+    from ..obs import timeline
+
+    seen = set()
+    n = 0
+    for s in family.scenarios():
+        if id(s.graph) in seen:
+            continue
+        seen.add(id(s.graph))
+        result = simulate(s.graph, s.specs, s.bound_w, policy=s.policy,
+                          latency_s=s.latency_s, trace_every=0.0,
+                          bound_schedule=s.bound_schedule,
+                          node_trace=True)
+        bound = ([(0.0, s.bound_w)] + list(s.bound_schedule)
+                 if s.bound_schedule else s.bound_w)
+        n += timeline.sim_tracks(result, bound, label=s.name,
+                                 specs=s.specs)
+    return n
+
+
 def _serve_sweep(args: argparse.Namespace) -> int:
     from ..core.scenarios import ScenarioFamily
+    from ..obs import trace as obs_trace
     from ..serving import SweepService, poisson_replay
 
     family = ScenarioFamily.from_corpus(
@@ -83,6 +114,12 @@ def _serve_sweep(args: argparse.Namespace) -> int:
         with open(args.json, "w") as fh:
             json.dump(summary, fh, indent=2)
         print(f"[serve] wrote {args.json}")
+
+    if obs_trace.enabled():
+        n_ev = _emit_power_timelines(family)
+        path = obs_trace.flush_env_trace()
+        print(f"[serve] trace: {n_ev} power-timeline events"
+              + (f", wrote {path}" if path else ""))
 
     if summary["failures"]:
         for rec in report.failures[:5]:

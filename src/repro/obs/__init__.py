@@ -1,0 +1,35 @@
+"""Stack-wide observability: tracing, metrics, timelines, regression.
+
+Four pieces, one import:
+
+* :mod:`repro.obs.trace` — a thread-safe span/instant/counter tracer
+  exporting Chrome ``trace_event`` JSON (Perfetto-viewable), near-zero
+  cost when disabled, enabled by injection or ``REPRO_TRACE=<path>``.
+* :mod:`repro.obs.metrics` — a labeled counter/gauge/histogram
+  registry with streaming nearest-rank percentiles.
+* :mod:`repro.obs.timeline` — per-node power/frequency/job counter
+  tracks from simulation results (the paper's donations as a Gantt
+  view against the bound line).
+* :mod:`repro.obs.regress` — the ``python -m repro.obs regress`` BENCH
+  artifact differ gating CI.
+
+This package-level module imports only :mod:`.trace` and
+:mod:`.metrics`; :mod:`.timeline` and :mod:`.regress` import
+``repro.core`` and are imported lazily by consumers to keep
+``repro.core`` → ``repro.obs.trace`` free of cycles.
+"""
+
+from . import trace
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      default_registry)
+from .trace import TRACE_ENV, Tracer
+
+# A bare `REPRO_TRACE=out.json python -m ...` run needs no code changes:
+# importing any instrumented layer activates the file-backed tracer.
+trace.configure_from_env()
+
+__all__ = [
+    "trace", "Tracer", "TRACE_ENV",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry",
+]

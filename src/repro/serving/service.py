@@ -84,6 +84,8 @@ from repro.core.sweep import (DEFAULT_MEMORY_BUDGET_MB, AssignmentCache,
                               bucket_key, next_pow2, plan_backend,
                               plan_chunk_rows, scenario_cache_key,
                               scenario_dims)
+from repro.obs import MetricsRegistry
+from repro.obs import trace as obs_trace
 
 #: Default rows one service bucket holds before it force-flushes.  Kept
 #: deliberately small: the service optimizes latency under a deadline,
@@ -149,7 +151,14 @@ class ServeTicket:
 
 @dataclass
 class ServiceStats:
-    """A consistent snapshot of the service counters."""
+    """A consistent snapshot of the service counters.
+
+    Counts and latency percentiles are read out of the service's
+    :class:`~repro.obs.metrics.MetricsRegistry` (one source of truth —
+    ``benchmarks/serve_stream.py`` quotes the same registry), so the
+    percentiles are the registry histogram's nearest-rank values over
+    every resolved request, cache hits included.
+    """
 
     submitted: int = 0
     completed: int = 0
@@ -160,8 +169,12 @@ class ServiceStats:
     flushed_full: int = 0
     flushed_deadline: int = 0
     phantom_rows: int = 0
+    #: Nearest-rank submit→result latency percentiles over every
+    #: resolved request (None before the first resolution).
+    latency_p50_s: Optional[float] = None
+    latency_p99_s: Optional[float] = None
 
-    def to_dict(self) -> Dict[str, int]:
+    def to_dict(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
 
 
@@ -171,6 +184,9 @@ class _Request:
     ticket: ServeTicket
     submit_t: float
     cache_key: Optional[tuple]
+    #: Async-span correlation id when tracing is enabled (None when
+    #: disabled — no per-request id allocation on the fast path).
+    aid: Optional[str] = None
 
 
 @dataclass
@@ -227,7 +243,8 @@ class SweepService:
                  shard_devices: Optional[int] = None,
                  memory_budget_mb: Optional[float] = None,
                  result_cache: bool = True,
-                 fallback_workers: int = 2):
+                 fallback_workers: int = 2,
+                 metrics: Optional[MetricsRegistry] = None):
         if executor not in ("jax", "vector"):
             raise ValueError(f"unknown service executor {executor!r} "
                              "(use 'jax' or 'vector')")
@@ -255,13 +272,28 @@ class SweepService:
 
         self._assignments = AssignmentCache()
         self._cache: Dict[tuple, SimResult] = {}
-        self._lock = threading.Lock()          # counters + cache
-        self._stats = ServiceStats()
+        self._lock = threading.Lock()          # cache + outstanding
+        #: All service counters/latencies live in one metrics registry
+        #: (injectable, else private) — :meth:`stats` and the serving
+        #: benchmarks read the same numbers.
+        self.metrics = metrics if metrics is not None \
+            else MetricsRegistry()
+        self._c_submitted = self.metrics.counter("serve_submitted")
+        self._c_completed = self.metrics.counter("serve_completed")
+        self._c_failed = self.metrics.counter("serve_failed")
+        self._c_cache_hits = self.metrics.counter("serve_cache_hits")
+        self._c_fallbacks = self.metrics.counter("serve_fallbacks")
+        self._c_buckets = self.metrics.counter("serve_buckets")
+        self._c_flushes = self.metrics.counter("serve_flushes")
+        self._c_phantom = self.metrics.counter("serve_phantom_rows")
+        self._h_latency = self.metrics.histogram("serve_latency_s")
+        self._phase: Optional[str] = None
         self._outstanding = 0
         self._idle = threading.Condition(self._lock)
         self._jax_align: Optional[int] = None
         self._dims_cache: Dict[tuple, tuple] = {}
         self._bucket_seq = itertools.count()
+        self._req_seq = itertools.count()
 
         self._inbox: "queue.Queue" = queue.Queue()
         self._dispatch_q: "queue.Queue" = queue.Queue()
@@ -316,10 +348,45 @@ class SweepService:
                         f"after {timeout}s")
                 self._idle.wait(timeout=left)
 
+    def set_phase(self, phase: Optional[str]) -> None:
+        """Tag subsequent latency observations with ``phase=<name>``.
+
+        Latencies are always recorded in the unlabeled series (which
+        :meth:`stats` reads); when a phase is set they are *also*
+        recorded under a ``phase`` label so benchmarks can quote
+        steady-state percentiles that exclude warm-up::
+
+            svc.set_phase("steady")
+            ...
+            p50 = svc.latency_pct(50, phase="steady")
+        """
+        self._phase = phase
+
+    def latency_pct(self, pct: float, **labels) -> Optional[float]:
+        """Latency percentile from the registry histogram (seconds)."""
+        return self._h_latency.pct(pct, **labels)
+
+    def _observe_latency(self, latency_s: float) -> None:
+        self._h_latency.observe(latency_s)
+        if self._phase is not None:
+            self._h_latency.observe(latency_s, phase=self._phase)
+
     def stats(self) -> ServiceStats:
-        """A point-in-time copy of the service counters."""
-        with self._lock:
-            return dataclasses.replace(self._stats)
+        """A point-in-time snapshot of the service counters, read from
+        the metrics registry."""
+        return ServiceStats(
+            submitted=int(self._c_submitted.total()),
+            completed=int(self._c_completed.total()),
+            failed=int(self._c_failed.total()),
+            cache_hits=int(self._c_cache_hits.total()),
+            fallbacks=int(self._c_fallbacks.total()),
+            buckets=int(self._c_buckets.total()),
+            flushed_full=int(self._c_flushes.value(cause="full")),
+            flushed_deadline=int(
+                self._c_flushes.value(cause="deadline")),
+            phantom_rows=int(self._c_phantom.total()),
+            latency_p50_s=self._h_latency.pct(50),
+            latency_p99_s=self._h_latency.pct(99))
 
     # ------------------------------------------------------------- feeder
     def submit(self, scenario: Scenario) -> ServeTicket:
@@ -338,20 +405,30 @@ class SweepService:
             with self._lock:
                 hit = self._cache.get(key)
             if hit is not None:
-                with self._lock:
-                    self._stats.submitted += 1
-                    self._stats.completed += 1
-                    self._stats.cache_hits += 1
+                self._c_submitted.inc()
+                self._c_completed.inc()
+                self._c_cache_hits.inc()
+                latency = time.perf_counter() - t0
+                self._observe_latency(latency)
+                if obs_trace.enabled():
+                    obs_trace.instant("cache-hit", cat="serve",
+                                      track="service",
+                                      args={"scenario": scenario.name})
                 ticket._resolve(ServeRecord(
                     scenario=scenario, result=hit, backend="cache",
-                    cached=True,
-                    latency_s=time.perf_counter() - t0))
+                    cached=True, latency_s=latency))
                 return ticket
+        self._c_submitted.inc()
         with self._lock:
-            self._stats.submitted += 1
             self._outstanding += 1
+        aid = None
+        if obs_trace.enabled():
+            aid = f"req{next(self._req_seq)}"
+            obs_trace.async_begin("request", aid, cat="serve",
+                                  track="service",
+                                  args={"scenario": scenario.name})
         self._inbox.put(_Request(scenario=scenario, ticket=ticket,
-                                 submit_t=t0, cache_key=key))
+                                 submit_t=t0, cache_key=key, aid=aid))
         return ticket
 
     def submit_many(self, scenarios: Sequence[Scenario]
@@ -406,12 +483,12 @@ class SweepService:
             n, j = bucket.pad_dims[:2]
             label = (f"serve:{bucket.backend}#{next(self._bucket_seq)}"
                      f":padded(N{n},J{j})")
-            with self._lock:
-                self._stats.buckets += 1
-                if cause == "full":
-                    self._stats.flushed_full += 1
-                else:
-                    self._stats.flushed_deadline += 1
+            self._c_buckets.inc()
+            self._c_flushes.inc(cause=cause)
+            if obs_trace.enabled():
+                obs_trace.instant("flush", cat="serve", track="service",
+                                  args={"cause": cause, "label": label,
+                                        "rows": len(bucket.requests)})
             self._dispatch_q.put(_Flush(bucket=bucket, cause=cause,
                                         label=label))
 
@@ -430,6 +507,10 @@ class SweepService:
                 bucket = self._open_bucket(key, backend, req.scenario,
                                            time.perf_counter())
                 buckets[key] = bucket
+                if obs_trace.enabled():
+                    obs_trace.instant(
+                        "bucket-open", cat="serve", track="service",
+                        args={"backend": backend, "cap": bucket.cap})
             bucket.requests.append(req)
             if len(bucket.requests) >= bucket.cap:
                 flush(bucket, "full")
@@ -516,6 +597,7 @@ class SweepService:
             if not live:
                 continue
             bucket.requests = live
+            dispatch_t0 = time.perf_counter()
             try:
                 scens, pad = self._padded_requests(flush)
                 assignments = assignments + [assignments[-1]] * pad
@@ -523,17 +605,31 @@ class SweepService:
                     bucket.backend, scens, assignments, False,
                     bucket.pad_dims, vector_dt=self.vector_dt,
                     shard_devices=self.shard_devices)
-                with self._lock:
-                    self._stats.phantom_rows += pad
+                self._c_phantom.inc(pad)
                 if bucket.backend == "jax":
                     pending = sim.dispatch()
                     pending.profile.bucket = flush.label
                     # recorded at dispatch, unconditionally: a failed
                     # fetch must still show up in the profile
                     self.profile.add(pending.profile)
+                    if obs_trace.enabled():
+                        obs_trace.complete(
+                            "serve:dispatch", dispatch_t0,
+                            time.perf_counter() - dispatch_t0,
+                            cat="serve", track="service",
+                            args={"label": flush.label,
+                                  "rows": len(live), "phantom": pad})
                     self._fetch_q.put((flush, sim, pending))
                 else:
-                    self._resolve_flush(flush, sim.run())
+                    results = sim.run()
+                    if obs_trace.enabled():
+                        obs_trace.complete(
+                            "serve:run", dispatch_t0,
+                            time.perf_counter() - dispatch_t0,
+                            cat="serve", track="service",
+                            args={"label": flush.label,
+                                  "rows": len(live)})
+                    self._resolve_flush(flush, results)
             except Exception as e:  # noqa: BLE001 — captured per bucket
                 self._fail_flush(flush, f"{type(e).__name__}: {e}")
 
@@ -544,8 +640,15 @@ class SweepService:
             if item is _Close:
                 return
             flush, sim, pending = item
+            fetch_t0 = time.perf_counter()
             try:
-                self._resolve_flush(flush, sim.fetch(pending))
+                results = sim.fetch(pending)
+                if obs_trace.enabled():
+                    obs_trace.complete(
+                        "serve:fetch", fetch_t0,
+                        time.perf_counter() - fetch_t0, cat="serve",
+                        track="service", args={"label": flush.label})
+                self._resolve_flush(flush, results)
             except Exception as e:  # noqa: BLE001 — captured per bucket
                 self._fail_flush(flush, f"{type(e).__name__}: {e}")
 
@@ -560,10 +663,17 @@ class SweepService:
             backend=backend, bucket=bucket,
             fallback_reason=fallback_reason, flush_cause=flush_cause,
             latency_s=time.perf_counter() - req.submit_t)
+        self._c_completed.inc()
+        if error is not None:
+            self._c_failed.inc()
+        self._observe_latency(record.latency_s)
+        if req.aid is not None:
+            obs_trace.async_end("request", req.aid, cat="serve",
+                                track="service",
+                                args={"backend": backend,
+                                      "cause": flush_cause,
+                                      "ok": error is None})
         with self._idle:
-            self._stats.completed += 1
-            if error is not None:
-                self._stats.failed += 1
             if error is None and req.cache_key is not None:
                 self._cache[req.cache_key] = result
             self._outstanding -= 1
@@ -586,8 +696,11 @@ class SweepService:
     # ----------------------------------------------------------- fallback
     def _spawn_fallback(self, req: _Request,
                         reason: Optional[str]) -> None:
-        with self._lock:
-            self._stats.fallbacks += 1
+        self._c_fallbacks.inc()
+        if obs_trace.enabled():
+            obs_trace.instant("fallback", cat="serve", track="service",
+                              args={"scenario": req.scenario.name,
+                                    "reason": reason})
 
         def run() -> None:
             try:

@@ -25,6 +25,10 @@ import repro.cluster.scheduler
 import repro.core.batchsim
 import repro.core.scenarios
 import repro.core.sweep
+import repro.obs.metrics
+import repro.obs.regress
+import repro.obs.timeline
+import repro.obs.trace
 import repro.policies.learned
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -34,7 +38,9 @@ FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
 DOCTEST_MODULES = [repro.core.sweep, repro.core.batchsim,
                    repro.core.scenarios, repro.cluster.arrivals,
                    repro.cluster.policies, repro.cluster.scheduler,
-                   repro.cluster.metrics, repro.policies.learned]
+                   repro.cluster.metrics, repro.policies.learned,
+                   repro.obs.trace, repro.obs.metrics,
+                   repro.obs.timeline, repro.obs.regress]
 
 
 @pytest.mark.parametrize("mod", DOCTEST_MODULES,
@@ -98,7 +104,10 @@ def _public_members(mod):
                                  repro.cluster.arrivals,
                                  repro.cluster.policies,
                                  repro.cluster.scheduler,
-                                 repro.cluster.metrics],
+                                 repro.cluster.metrics,
+                                 repro.obs.trace, repro.obs.metrics,
+                                 repro.obs.timeline,
+                                 repro.obs.regress],
                          ids=lambda m: m.__name__)
 def test_public_api_has_docstrings(mod):
     """pydocstyle-lite: the bucket planner / mask conventions must stay
